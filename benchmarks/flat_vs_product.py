@@ -1,0 +1,67 @@
+"""Paper App. J / Fig 11: flat butterfly (one block-sparse GEMM) vs the
+sequential product of butterfly factor matrices.
+
+The paper measures up to 3x on a V100; the structural cause — log2(k)
+dependent GEMMs vs one — is hardware-independent and reproduces on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import butterfly as bf
+from repro.kernels import ref
+
+
+def run(n: int = 1024, block: int = 32, batch: int = 512) -> None:
+    rng = np.random.default_rng(0)
+    nb = n // block
+    x = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+
+    for max_stride in [4, 16, nb]:
+        strides = bf.flat_butterfly_strides(max_stride)
+        # --- product form: x @ (I + lam B_2) @ (I + lam B_4) ...
+        factors = [
+            jnp.asarray(
+                np.eye(n) + 0.1 * bf.butterfly_factor_matrix(
+                    nb, 2 * s // 1 if s > 1 else 2, rng, block=block
+                ),
+                jnp.float32,
+            )
+            for s in ([1] + strides)
+        ]
+
+        @jax.jit
+        def product(x, factors=tuple(factors)):
+            y = x
+            for f in factors:
+                y = y @ f
+            return y
+
+        # --- flat form: one BSR sparse matmul with the same nnz structure
+        pat = bf.make_pattern(n, n, block=block, max_stride=max_stride)
+        blocks = jnp.asarray(
+            rng.standard_normal((pat.nb_out, pat.r, block, block))
+            / np.sqrt(pat.r * block),
+            jnp.float32,
+        )
+        cols = jnp.asarray(pat.cols)
+
+        @jax.jit
+        def flat(x):
+            return ref.bsr_matmul_gather(x, blocks, cols)
+
+        t_prod = time_fn(product, x)
+        t_flat = time_fn(flat, x)
+        emit(
+            f"flat_vs_product/k={max_stride}",
+            t_flat,
+            f"product_us={t_prod:.1f};speedup={t_prod / t_flat:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Fig 8 / Table 5: GPT-2-class LM, dense vs Pixelfly.
+
+CPU-scale twin of the WikiText-103 table: reduced GPT-2-small-family
+config; measures train-step wall-clock, parameter ratio, and loss parity
+after a fixed number of steps on the synthetic LM stream (the paper's
+claim is iso-perplexity at 2.1x faster training).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_local_mesh
+from repro.training.data import SyntheticLM
+from repro.training.loop import TrainConfig, Trainer
+from repro.training.optimizer import OptConfig
+
+
+def _cfg(sparse: bool) -> ModelConfig:
+    return ModelConfig(
+        name="gpt2-bench", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=4, head_dim=64, d_ff=1024,
+        vocab_size=512, dtype="float32", sparse=sparse,
+        sparse_density=0.2, sparse_block=64, attn_block=64, attn_chunk=128,
+        sparse_attention=sparse,
+    )
+
+
+def run(steps: int = 25) -> None:
+    results = {}
+    for sparse in (False, True):
+        cfg = _cfg(sparse)
+        data = SyntheticLM(cfg.vocab_size, 128, 8, seed=0)
+        tr = Trainer(
+            cfg,
+            OptConfig(lr=3e-3, warmup_steps=2, total_steps=steps),
+            data,
+            make_local_mesh(),
+            TrainConfig(
+                steps=steps, ckpt_dir=f"/tmp/bench_lm_{sparse}",
+                ckpt_every=10_000, log_every=10_000,
+            ),
+        )
+        hist = tr.run()
+        med = sorted(h["step_time_s"] for h in hist[2:])[len(hist[2:]) // 2]
+        n_params = sum(p.size for p in jax.tree.leaves(tr.state["params"]))
+        results[sparse] = {
+            "us": med * 1e6,
+            "loss": float(np.mean([h["loss"] for h in hist[-5:]])),
+            "params": n_params,
+        }
+    d, s = results[False], results[True]
+    emit(
+        "lm_speedup/gpt2-class",
+        s["us"],
+        f"dense_us={d['us']:.0f};speedup={d['us']/s['us']:.2f}x"
+        f";loss_sparse={s['loss']:.3f};loss_dense={d['loss']:.3f}"
+        f";param_ratio={s['params']/d['params']:.3f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

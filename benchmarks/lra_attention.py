@@ -1,0 +1,53 @@
+"""Paper Fig 9 (LRA): dense vs pixelfly block-sparse attention at long
+sequence lengths (1k-4k, the LRA range). Measures the attention op itself
+(the bottleneck the 5.2x speedup comes from) and the key-read fraction."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import attn_pattern as ap
+from repro.models.layers import flash_attention_jnp, sparse_attention_jnp
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    b, hk, g, d = 2, 4, 1, 64
+    for s in [1024, 2048, 4096]:
+        q = jnp.asarray(rng.standard_normal((b, s, hk, g, d)) * 0.1, jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, hk, d)) * 0.1, jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, hk, d)) * 0.1, jnp.float32)
+        cfg = ap.AttentionPatternConfig(
+            block=128, local_blocks=1, max_stride=0, global_blocks=1
+        )
+        mask = ap.pixelfly_attention_block_mask(s, s, cfg, causal=True)
+        sched = ap.block_schedule(mask, 128, 128)
+
+        dense = jax.jit(
+            functools.partial(
+                flash_attention_jnp, causal=True, chunk=512, sm_scale=d**-0.5
+            )
+        )
+        sparse = jax.jit(
+            lambda q, k, v: sparse_attention_jnp(
+                q, k, v, sched, causal=True, sm_scale=d**-0.5
+            )
+        )
+        t_d = time_fn(dense, q, k, v, warmup=1, iters=3)
+        t_s = time_fn(sparse, q, k, v, warmup=1, iters=3)
+        keys = ap.keys_per_query(mask, 128, s)
+        emit(
+            f"lra_attention/s={s}",
+            t_s,
+            f"dense_us={t_d:.0f};speedup={t_d/t_s:.2f}x"
+            f";keys_per_query={keys:.0f}/{s}",
+        )
+
+
+if __name__ == "__main__":
+    run()

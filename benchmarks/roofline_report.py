@@ -1,0 +1,43 @@
+"""§Roofline report: formats the dry-run sweep JSON into the per-(arch x
+shape x mesh) roofline table (terms, bottleneck, MODEL_FLOPS ratio).
+
+Reads dryrun_baseline.json produced by:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+      --json dryrun_baseline.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "dryrun_baseline.json")
+
+
+def run(path: str = DEFAULT) -> None:
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"run dryrun --all first ({path})")
+        return
+    rows = json.load(open(path))
+    for r in rows:
+        if not r.get("ok"):
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}/{r.get('multi_pod')}",
+                0.0,
+                f"FAILED:{r.get('error', '?')[:60]}",
+            )
+            continue
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["compute_s"] * 1e6,
+            f"mem_ms={r['memory_s']*1e3:.1f};coll_ms={r['collective_s']*1e3:.1f}"
+            f";bottleneck={r['bottleneck']}"
+            f";useful={r['useful_flops_ratio']:.3f}"
+            f";temp_gb={(r['bytes_per_device'] or 0)/1e9:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig 5 / Table 4: dense vs Pixelfly MLP-Mixer / ViT training step.
+
+CPU-scale twin of the ImageNet table: same architecture family, reduced
+width/depth. Reports wall-clock per train step, parameter ratio, and FLOP
+ratio (the transferable part of the 1.7-2.3x claim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.models import vision as V
+
+
+def _train_step(cfg, apply_fn):
+    def loss_fn(params, x, y):
+        lg = apply_fn(cfg, params, x)
+        return -jnp.take_along_axis(
+            jax.nn.log_softmax(lg), y[:, None], axis=1
+        ).mean()
+
+    @jax.jit
+    def step(params, x, y):
+        l, g = jax.value_and_grad(loss_fn)(params, x, y)
+        return jax.tree.map(lambda p, gg: p - 1e-3 * gg, params, g), l
+
+    return step
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((32, 64, 192)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 100, 32), jnp.int32)
+
+    for kind, init_fn, apply_fn in [
+        ("mixer", V.init_mixer, V.apply_mixer),
+        ("vit", V.init_vit, V.apply_vit),
+    ]:
+        times, params_n = {}, {}
+        for sparse in (False, True):
+            cfg = V.VisionConfig(
+                kind=kind, num_layers=4, d_model=256, num_heads=4,
+                d_ff=1024, num_patches=64, num_classes=100, patch_dim=192,
+                token_ff=128, sparse=sparse, sparse_density=0.15,
+                sparse_block=32,
+            )
+            params = init_fn(jax.random.PRNGKey(0), cfg)
+            step = _train_step(cfg, apply_fn)
+            times[sparse] = time_fn(step, params, x, y, warmup=1, iters=3)
+            params_n[sparse] = sum(p.size for p in jax.tree.leaves(params))
+        emit(
+            f"vision_speedup/{kind}",
+            times[True],
+            f"dense_us={times[False]:.0f};speedup={times[False]/times[True]:.2f}x"
+            f";param_ratio={params_n[True]/params_n[False]:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + decode with a KV cache on a smoke
+config (CPU). The production path for the full configs is exercised by the
+multi-pod dry-run (decode_32k / long_500k cells).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import Server
+
+
+def main():
+    cfg = registry.get_smoke("smollm-360m", sparse=True)
+    server = Server(cfg, make_local_mesh())
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=(4, 16), dtype=np.int32
+    )
+    out = server.generate(prompts, gen_len=12)
+    print("generated token grid (4 requests x 12 tokens):")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Ablation (paper §5.3): sweep density and the butterfly/low-rank split
+on a small LM; prints loss and params per setting — the CPU twin of the
+'1/4 low-rank : 3/4 butterfly is best' finding.
+
+  PYTHONPATH=src python examples/sparsity_ablation.py [--steps 60]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.training.data import SyntheticLM
+from repro.training.loop import TrainConfig, Trainer
+from repro.training.optimizer import OptConfig
+import jax
+
+
+def run_one(density, lowrank_frac, steps):
+    # widths where the budget split is non-degenerate (rank floor = 32)
+    cfg = registry.get_smoke("smollm-360m", sparse=True).replace(
+        sparse_density=density, lowrank_frac=lowrank_frac, num_layers=2,
+        d_model=384, num_heads=6, num_kv_heads=2, d_ff=768, sparse_block=16,
+    )
+    data = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    tr = Trainer(
+        cfg,
+        OptConfig(lr=3e-3, warmup_steps=5, total_steps=steps),
+        data,
+        make_local_mesh(),
+        TrainConfig(steps=steps, ckpt_dir=f"/tmp/abl_{density}_{lowrank_frac}",
+                    ckpt_every=10**9, log_every=10**9),
+    )
+    hist = tr.run()
+    n = sum(p.size for p in jax.tree.leaves(tr.state["params"]))
+    return float(np.mean([h["loss"] for h in hist[-5:]])), n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    print("density,lowrank_frac,final_loss,params")
+    for density in [0.2, 0.4, 0.8]:
+        for frac in [0.0, 0.25, 0.5]:
+            loss, n = run_one(density, frac, args.steps)
+            print(f"{density},{frac},{loss:.4f},{n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entry point.
+
+``get(name)`` returns the exact published config; ``get(name, sparse=True)``
+returns its Pixelfly-sparsified twin (the paper's technique switched on with
+the §3.3 defaults); ``get_smoke(name)`` returns the reduced same-family
+config used by the per-arch smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+
+_MODULES = {
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+# Mesh-usage strategy per arch (see repro.distributed.sharding.Strategy):
+# TP+FSDP for big models; pure FSDP/DP for small ones where TP-16 would be
+# dominated by per-layer activation collectives.
+DEFAULT_STRATEGY = {
+    "deepseek-67b": "tp",
+    "qwen3-1.7b": "fsdp",
+    "qwen2-1.5b": "fsdp",
+    "smollm-360m": "fsdp",
+    "qwen2-vl-7b": "tp",
+    "deepseek-moe-16b": "tp",  # expert parallelism needs the model axis
+    "kimi-k2-1t-a32b": "tp",
+    "musicgen-large": "tp",
+    "zamba2-2.7b": "tp",
+    "mamba2-130m": "fsdp",
+}
+
+# Archs whose long_500k cell runs (sub-quadratic sequence mixing).
+LONG_CONTEXT_ARCHS = {"mamba2-130m", "zamba2-2.7b"}
+# Beyond-paper: pixelfly-sparse attention makes decode sub-quadratic, so
+# this full-attention arch also runs long_500k when sparse=True.
+LONG_CONTEXT_SPARSE_ARCHS = {"smollm-360m"}
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {', '.join(ARCH_NAMES)}"
+        )
+    return importlib.import_module(_MODULES[name])
+
+
+def get(
+    name: str,
+    *,
+    sparse: bool = False,
+    density: float | None = None,
+    **overrides,
+) -> ModelConfig:
+    cfg: ModelConfig = _module(name).FULL
+    if sparse:
+        cfg = cfg.replace(
+            sparse=True,
+            sparse_attention=(cfg.family not in ("ssm",)),
+        )
+        if density is not None:
+            cfg = cfg.replace(sparse_density=density)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def get_smoke(name: str, *, sparse: bool = False, **overrides) -> ModelConfig:
+    cfg: ModelConfig = _module(name).smoke()
+    if sparse:
+        cfg = cfg.replace(
+            sparse=True,
+            sparse_density=0.5,
+            sparse_attention=(cfg.family not in ("ssm",)),
+        )
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def shapes_for(name: str, *, sparse: bool = False) -> list[ShapeSpec]:
+    """The assigned shape cells for an arch (long_500k gated per DESIGN §5)."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if name in LONG_CONTEXT_ARCHS or (
+        sparse and name in LONG_CONTEXT_SPARSE_ARCHS
+    ):
+        out.append(SHAPES["long_500k"])
+    return out

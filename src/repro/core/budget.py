@@ -1,0 +1,157 @@
+"""Compute-budget allocation across layer types (paper §3.3 step 1, App. A, I.1).
+
+The paper's cost model:  Totalcost = Cost_mem * N_blockmem + Cost_flop * N_flop
+with block-aligned sparsity, so both terms scale linearly in density. The
+rule of thumb (validated in App. I): allocate the sparsity compute budget to
+each layer *type* proportional to that type's share of the dense compute,
+then split each layer's budget ~1/4 low-rank : ~3/4 flat block butterfly
+(§5.3 ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import butterfly
+
+__all__ = [
+    "LayerSchema",
+    "dense_flops",
+    "allocate",
+    "Allocation",
+    "split_sparse_lowrank",
+    "solve_two_type_closed_form",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSchema:
+    """One row of the model schema Ω = {(type, repeats, m, n)} (App. K.2)."""
+
+    kind: str  # e.g. "attn_proj", "mlp", "attention_matrix"
+    repeats: int
+    m: int  # out features (or seq len for attention matrices)
+    n: int  # in features
+    seq_len: int = 1  # tokens multiplying this GEMM (for compute weighting)
+
+    def dense_flops_per_token(self) -> float:
+        return 2.0 * self.repeats * self.m * self.n
+
+
+def dense_flops(schema: list[LayerSchema]) -> float:
+    return sum(s.dense_flops_per_token() * s.seq_len for s in schema)
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Chosen density + its split for one layer type."""
+
+    kind: str
+    density: float
+    lowrank_rank: int
+    max_stride: int
+    block: int
+
+
+def split_sparse_lowrank(
+    out_features: int,
+    in_features: int,
+    density: float,
+    *,
+    block: int = 128,
+    lowrank_frac: float = 0.25,
+) -> tuple[int, int]:
+    """Split a layer's density budget into (rank, max_stride) (§3.3 step 2).
+
+    ~``lowrank_frac`` of the parameter budget goes to the low-rank term
+    UVᵀ; the rank is a multiple of 32 (the paper's "smallest supported
+    block size" — on TPU the 8x128 VPU tile pads rank-32 factors without
+    waste), minimum 32. The remainder picks the largest flat-butterfly max
+    stride that fits.
+    """
+    total_params = density * out_features * in_features
+    lr_params_per_rank = out_features + in_features
+    gran = 32
+    if lowrank_frac <= 0:
+        # butterfly-only ablation (§5.3): no low-rank term at all
+        return 0, butterfly.max_stride_for_density(
+            in_features, block, max(density, block / in_features)
+        )
+    rank = int(lowrank_frac * total_params / lr_params_per_rank)
+    rank = max(gran, (rank // gran) * gran)
+    # never let the minimum-rank floor blow past ~1.5x the low-rank budget
+    while rank > gran and rank * lr_params_per_rank > 1.5 * lowrank_frac * total_params:
+        rank -= gran
+    remaining = max(0.0, total_params - rank * lr_params_per_rank)
+    sparse_density = remaining / (out_features * in_features)
+    # At least the block diagonal survives.
+    max_stride = butterfly.max_stride_for_density(
+        in_features, block, max(sparse_density, block / in_features)
+    )
+    return rank, max_stride
+
+
+def allocate(
+    schema: list[LayerSchema],
+    total_density: float,
+    *,
+    block: int = 128,
+    lowrank_frac: float = 0.25,
+) -> dict[str, Allocation]:
+    """Rule-of-thumb allocation (§3.3 step 1).
+
+    The total budget is ``total_density * dense_flops``. Each layer type
+    receives budget proportional to its dense compute fraction — which for a
+    linear cost model is the same as giving every type the *same density*
+    ``total_density``; the interesting work is the per-layer split into
+    low-rank + butterfly, which depends on each layer's (m, n).
+    """
+    out: dict[str, Allocation] = {}
+    for s in schema:
+        rank, max_stride = split_sparse_lowrank(
+            s.m, s.n, total_density, block=block, lowrank_frac=lowrank_frac
+        )
+        out[s.kind] = Allocation(
+            kind=s.kind,
+            density=total_density,
+            lowrank_rank=rank,
+            max_stride=max_stride,
+            block=block,
+        )
+    return out
+
+
+def solve_two_type_closed_form(
+    seq_len: int, d_model: int, param_budget: float
+) -> tuple[float, float]:
+    """Closed-form solution of the App. I.1 two-variable problem (Eq. 20).
+
+    minimize  d_a (s^2 + s d) + 2 d_m s d   s.t.  params(d_a, d_m) <= B.
+
+    Attention-density parameters scale with s*d per layer (projections) and
+    the MLP with 8 d^2 (4x expansion, two matrices); the cost is linear in
+    both densities, so the optimum lies on the budget boundary and the
+    cheapest cost-per-parameter type is filled last. Returns (d_a, d_m),
+    both clipped to [min_density, 1].
+    """
+    # Cost per unit density.
+    cost_a = seq_len * seq_len + seq_len * d_model
+    cost_m = 2 * seq_len * d_model
+    # Parameters per unit density.
+    par_a = 4 * d_model * d_model
+    par_m = 8 * d_model * d_model
+    # Cost-per-parameter; spend budget on the cheaper type first.
+    eff_a, eff_m = cost_a / par_a, cost_m / par_m
+    budget = param_budget
+    d_a = d_m = 0.0
+    order = sorted([("a", eff_a, par_a), ("m", eff_m, par_m)], key=lambda t: t[1])
+    for kind, _, par in order:
+        take = min(1.0, budget / par)
+        if kind == "a":
+            d_a = take
+        else:
+            d_m = take
+        budget -= take * par
+        if budget <= 0:
+            break
+    return d_a, d_m

@@ -1,0 +1,204 @@
+"""Pixelfly linear layer: ``W = γ·B + (1−γ)·U Vᵀ`` (paper §3.3 step 3).
+
+Functional style: a frozen *spec* (static pattern, shapes) plus a params
+pytree, so layers compose under ``jax.lax.scan`` over depth and shard with
+plain NamedSharding rules. ``B`` is a flat block butterfly stored in BSR
+layout (see ``repro.core.butterfly``); the low-rank factors U, V are
+block-aligned (rank a multiple of the hardware block).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budget as budget_lib
+from repro.core import butterfly
+from repro.kernels import ops
+
+__all__ = ["LinearSpec", "init_linear", "apply_linear", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Static description of one linear layer (dense or pixelfly)."""
+
+    in_features: int
+    out_features: int
+    sparse: bool = False
+    block: int = 128
+    max_stride: int = 1
+    rank: int = 128
+    use_bias: bool = False
+    dtype: Any = jnp.bfloat16
+
+    def pattern(self) -> butterfly.FlatButterflyPattern:
+        return butterfly.make_pattern(
+            self.out_features,
+            self.in_features,
+            block=self.block,
+            max_stride=self.max_stride,
+        )
+
+    @staticmethod
+    def pixelfly(
+        in_features: int,
+        out_features: int,
+        density: float,
+        *,
+        block: int = 128,
+        lowrank_frac: float = 0.25,
+        use_bias: bool = False,
+        dtype: Any = jnp.bfloat16,
+    ) -> "LinearSpec":
+        """Build a spec from a density budget (§3.3 step 2 split).
+
+        If the features are not multiples of ``block``, the block is halved
+        (down to 8, the VPU sublane) until they are; if even 8 does not
+        divide, the layer falls back to dense (the paper's recipe only
+        covers block-aligned GEMMs).
+        """
+        while block > 8 and (in_features % block or out_features % block):
+            block //= 2
+        if in_features % block or out_features % block:
+            return LinearSpec.dense(
+                in_features, out_features, use_bias=use_bias, dtype=dtype
+            )
+        rank, max_stride = budget_lib.split_sparse_lowrank(
+            out_features,
+            in_features,
+            density,
+            block=block,
+            lowrank_frac=lowrank_frac,
+        )
+        return LinearSpec(
+            in_features=in_features,
+            out_features=out_features,
+            sparse=True,
+            block=block,
+            max_stride=max_stride,
+            rank=rank,
+            use_bias=use_bias,
+            dtype=dtype,
+        )
+
+    @staticmethod
+    def dense(
+        in_features: int,
+        out_features: int,
+        *,
+        use_bias: bool = False,
+        dtype: Any = jnp.bfloat16,
+    ) -> "LinearSpec":
+        return LinearSpec(
+            in_features=in_features,
+            out_features=out_features,
+            sparse=False,
+            use_bias=use_bias,
+            dtype=dtype,
+        )
+
+
+def init_linear(key: jax.Array, spec: LinearSpec) -> dict:
+    """Initialize the parameter pytree for one linear layer."""
+    if not spec.sparse:
+        k1, _ = jax.random.split(key)
+        std = 1.0 / math.sqrt(spec.in_features)
+        p = {
+            "w": (
+                jax.random.normal(
+                    k1, (spec.in_features, spec.out_features), jnp.float32
+                )
+                * std
+            ).astype(spec.dtype)
+        }
+        if spec.use_bias:
+            p["b"] = jnp.zeros((spec.out_features,), spec.dtype)
+        return p
+
+    pat = spec.pattern()
+    kb, ku, kv, _ = jax.random.split(key, 4)
+    # Effective fan-in of the sparse term is r*block, of the low-rank term
+    # is `rank`; scale each so the summed output variance matches dense.
+    std_b = 1.0 / math.sqrt(pat.r * spec.block)
+    std_u = 1.0 / math.sqrt(spec.in_features)
+    std_v = 1.0 / math.sqrt(max(1, spec.rank))
+    p = {
+        "blocks": (
+            jax.random.normal(
+                kb, (pat.nb_out, pat.r, spec.block, spec.block), jnp.float32
+            )
+            * std_b
+        ).astype(spec.dtype),
+        "U": (
+            jax.random.normal(
+                ku, (spec.in_features, spec.rank), jnp.float32
+            )
+            * std_u
+        ).astype(spec.dtype),
+        "V": (
+            jax.random.normal(
+                kv, (spec.out_features, spec.rank), jnp.float32
+            )
+            * std_v
+        ).astype(spec.dtype),
+        # γ is learnable (paper §3.3); stored in fp32 like other scalars.
+        "gamma": jnp.asarray(0.5, jnp.float32),
+    }
+    if spec.use_bias:
+        p["b"] = jnp.zeros((spec.out_features,), spec.dtype)
+    return p
+
+
+def apply_linear(
+    spec: LinearSpec,
+    params: dict,
+    x: jax.Array,
+    *,
+    impl: str | None = None,
+    cols: np.ndarray | None = None,
+) -> jax.Array:
+    """y = x @ W (+ bias). ``cols`` may be passed to avoid re-deriving the
+    static pattern (e.g. when specs are built once at model setup)."""
+    if not spec.sparse:
+        y = jnp.einsum(
+            "...i,io->...o", x, params["w"],
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+    else:
+        if cols is None:
+            cols = spec.pattern().cols
+        g = params["gamma"].astype(jnp.float32)
+        # §Perf C2 (refuted): the transposed-gather custom VJP reads
+        # model-sharded blocks across shards (param all-gathers) — worse.
+        # §Perf C3 (kept): autodiff backward with bf16 cotangents
+        # (bsr_matmul_gather drops the f32 preferred type) + remat so the
+        # r gathered activation copies are recomputed, not saved.
+        cols_arr = jnp.asarray(cols)
+        ys = jax.checkpoint(
+            lambda xx, bb: ops.bsr_matmul(xx, bb, cols_arr, impl=impl)
+        )(x, params["blocks"])
+        # bf16 HLO values end-to-end (§Perf C3): MXU still accumulates
+        # fp32 internally; cotangent collectives stay in the model dtype.
+        xu = jnp.einsum("...i,ir->...r", x, params["U"])
+        yl = jnp.einsum("...r,or->...o", xu, params["V"])
+        y = (g * ys.astype(jnp.float32) + (1.0 - g) * yl.astype(jnp.float32)).astype(
+            x.dtype
+        )
+    if spec.use_bias:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def param_count(spec: LinearSpec) -> int:
+    if not spec.sparse:
+        n = spec.in_features * spec.out_features
+    else:
+        pat = spec.pattern()
+        n = pat.nnz + spec.rank * (spec.in_features + spec.out_features) + 1
+    return n + (spec.out_features if spec.use_bias else 0)

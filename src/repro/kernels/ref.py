@@ -1,0 +1,227 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are validated against
+(``tests/test_kernels_*``), and double as the portable execution path on
+non-TPU backends (the multi-pod dry-run compiles these — note the
+gather+einsum forms have genuinely *sparse* FLOPs in HLO, so the roofline
+accounting reflects the paper's compute savings, not a masked-dense proxy).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "bsr_matmul_gather",
+    "bsr_matmul_custom_vjp",
+    "bsr_matmul_dense_mask",
+    "bsr_to_dense",
+    "block_sparse_attention_ref",
+    "dense_attention_ref",
+    "block_mask_to_dense",
+]
+
+
+def bsr_to_dense(blocks: jax.Array, cols: jax.Array, n_in: int) -> jax.Array:
+    """Scatter BSR blocks into the dense (n_in, n_out) weight matrix.
+
+    Duplicate column slots sum (matching the gather/einsum semantics).
+    """
+    nb_out, r, b, _ = blocks.shape
+    w = jnp.zeros((n_in // b, nb_out, b, b), blocks.dtype)  # (jblk, iblk, b, b)
+    iblk = jnp.arange(nb_out)[:, None].repeat(r, 1)  # (nb_out, r)
+    w = w.at[cols.reshape(-1), iblk.reshape(-1)].add(
+        blocks.reshape(-1, b, b)
+    )
+    # (jblk, b, iblk, b) -> (n_in, n_out)
+    return w.transpose(0, 2, 1, 3).reshape(n_in, nb_out * b)
+
+
+def bsr_matmul_gather(
+    x: jax.Array, blocks: jax.Array, cols: jax.Array
+) -> jax.Array:
+    """Gather + einsum BSR matmul: the portable sparse-FLOPs path.
+
+    x (..., n_in), blocks (nb_out, r, b, b), cols (nb_out, r) ->
+    y (..., nb_out * b).
+
+    Accumulates one nnz-slot at a time (r <= ~8, unrolled) so the gathered
+    activations peak at 1/r of the naive all-slots gather — the Pallas
+    kernel streams these from VMEM and materializes none of it.
+    """
+    *lead, n_in = x.shape
+    nb_out, r, b, _ = blocks.shape
+    xb = x.reshape(*lead, n_in // b, b)
+    y = None
+    # NOTE (§Perf C3): no preferred_element_type=f32 here — each dot still
+    # accumulates in fp32 inside the MXU, but keeping the HLO value (and
+    # therefore every backward cotangent, including the per-layer dx
+    # all-reduce) in the model dtype halves TP collective bytes. The
+    # r <= 8 inter-slot adds in bf16 cost ~1 ulp.
+    for t in range(r):
+        xg = jnp.take(xb, cols[:, t], axis=-2)  # (..., nb_out, b)
+        yt = jnp.einsum("...ik,ikc->...ic", xg, blocks[:, t])
+        y = yt if y is None else y + yt
+    return y.reshape(*lead, nb_out * b).astype(x.dtype)
+
+
+def bsr_matmul_dense_mask(
+    x: jax.Array, blocks: jax.Array, cols: jax.Array
+) -> jax.Array:
+    """Masked-dense oracle (full dense FLOPs) — tests only."""
+    n_in = x.shape[-1]
+    w = bsr_to_dense(blocks, cols, n_in)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Custom-VJP BSR matmul: scatter-free backward (§Perf C2/B2)
+# ----------------------------------------------------------------------
+#
+# jax.grad of the gather formulation produces a scatter-add for d_x; under
+# SPMD that scatter forces an fp32 all-reduce + "involuntary full
+# rematerialization" resharding per sparse linear per microbatch — the
+# dominant collective in every TP train cell. But the transpose of a flat
+# butterfly is a flat butterfly: d_x = dy @ Wᵀ is just another block
+# GATHER with statically transposed tables, and cotangents can stay in the
+# model dtype. This mirrors what the Pallas backward kernel does on TPU.
+
+
+@functools.lru_cache(maxsize=512)
+def _bsr_custom_fn(cols_bytes: bytes, nb_out: int, r: int, nb_in: int, b: int):
+    from repro.core.butterfly import transpose_tables
+
+    cols = np.frombuffer(cols_bytes, np.int32).reshape(nb_out, r).copy()
+    src_i, src_t, valid = transpose_tables(cols, nb_in)
+    w = src_i.shape[1]
+
+    def _fwd_impl(x, blocks):
+        *lead, n_in = x.shape
+        xb = x.reshape(*lead, nb_in, b)
+        y = None
+        for t in range(r):
+            xg = jnp.take(xb, cols[:, t], axis=-2)
+            yt = jnp.einsum(
+                "...ik,ikc->...ic", xg, blocks[:, t],
+                preferred_element_type=jnp.float32,
+            )
+            y = yt if y is None else y + yt
+        return y.reshape(*lead, nb_out * b).astype(x.dtype)
+
+    @jax.custom_vjp
+    def f(x, blocks):
+        return _fwd_impl(x, blocks)
+
+    def fwd(x, blocks):
+        return _fwd_impl(x, blocks), (x, blocks)
+
+    def bwd(res, dy):
+        x, blocks = res
+        *lead, _ = x.shape
+        dyb = dy.astype(x.dtype).reshape(*lead, nb_out, b)
+        xb = x.reshape(*lead, nb_in, b)
+        # d_x: transposed butterfly gather (no scatter, model dtype)
+        d_x = None
+        for u in range(w):
+            bl = blocks[src_i[:, u], src_t[:, u]]  # (nb_in, b_in, b_out)
+            dg = jnp.take(dyb, src_i[:, u], axis=-2)  # (..., nb_in, b_out)
+            term = jnp.einsum(
+                "...ic,ikc->...ik", dg, bl,
+                preferred_element_type=jnp.float32,
+            )
+            term = term * jnp.asarray(valid[:, u])[:, None]
+            d_x = term if d_x is None else d_x + term
+        d_x = d_x.reshape(x.shape).astype(x.dtype)
+        # d_blocks: per-slot token contraction (same gathers as forward)
+        d_blocks = []
+        for t in range(r):
+            xg = jnp.take(xb, cols[:, t], axis=-2)  # (..., nb_out, b_in)
+            db = jnp.einsum(
+                "...ik,...ic->ikc", xg, dyb,
+                preferred_element_type=jnp.float32,
+            )
+            d_blocks.append(db)
+        d_blocks = jnp.stack(d_blocks, axis=1).astype(blocks.dtype)
+        return d_x, d_blocks
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def bsr_matmul_custom_vjp(
+    x: jax.Array, blocks: jax.Array, cols: np.ndarray
+) -> jax.Array:
+    """Gather BSR matmul with the scatter-free transposed-gather backward.
+    ``cols`` must be a static numpy table."""
+    cols = np.asarray(cols, np.int32)
+    nb_out, r, b, _ = blocks.shape
+    nb_in = x.shape[-1] // b
+    f = _bsr_custom_fn(cols.tobytes(), nb_out, r, nb_in, b)
+    return f(x, blocks)
+
+
+# ----------------------------------------------------------------------
+# Block-sparse attention
+# ----------------------------------------------------------------------
+
+
+def block_mask_to_dense(
+    block_mask: np.ndarray, bq: int, bk: int, sq: int, sk: int, causal: bool
+) -> np.ndarray:
+    """Expand an (nqb, nkb) boolean block mask to an (sq, sk) element mask."""
+    m = np.repeat(np.repeat(block_mask, bq, axis=0), bk, axis=1)[:sq, :sk]
+    if causal:
+        m = m & (np.arange(sk)[None, :] <= np.arange(sq)[:, None])
+    return m
+
+
+def dense_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array | None = None,
+    *,
+    causal: bool = False,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Plain masked softmax attention. q,k,v: (B, H, S, D); mask (Sq, Sk)."""
+    *_, sq, d = q.shape
+    sk = k.shape[-2]
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    neg = jnp.finfo(jnp.float32).min
+    if mask is not None:
+        logits = jnp.where(mask, logits, neg)
+    if causal:
+        cm = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        logits = jnp.where(cm, logits, neg)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
+
+
+def block_sparse_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_mask: np.ndarray,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = False,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Oracle: dense attention under the expanded block mask."""
+    sq, sk = q.shape[-2], k.shape[-2]
+    m = block_mask_to_dense(block_mask, block_q, block_k, sq, sk, causal)
+    return dense_attention_ref(
+        q, k, v, jnp.asarray(m), causal=False, sm_scale=sm_scale
+    )

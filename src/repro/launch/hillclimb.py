@@ -1,0 +1,63 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""§Perf hillclimb driver: re-lower one cell with a named variant and
+append (variant, roofline terms, memory) to perf_log.json — the
+hypothesis -> change -> measure -> validate loop's bookkeeping.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch kimi-k2-1t-a32b \
+      --shape train_4k --tag moe-anchor --note "EP anchor on capacity buffer"
+"""
+
+import argparse
+import json
+
+from repro.configs.base import SHAPES
+from repro.configs import registry
+from repro.launch.dryrun import run_cell
+
+LOG = os.path.join(os.path.dirname(__file__), "..", "..", "..", "perf_log.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_NAMES)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--note", default="")
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--density", type=float, default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field=value (value eval'd)")
+    ap.add_argument("--log", default=os.path.abspath(LOG))
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = eval(v)  # noqa: S307 - operator tool
+
+    res = run_cell(
+        args.arch, args.shape,
+        multi_pod=args.multi_pod, sparse=not args.dense,
+        density=args.density, strategy=args.strategy, overrides=overrides,
+    )
+    res["tag"] = args.tag
+    res["note"] = args.note
+    res["overrides"] = {k: repr(v) for k, v in overrides.items()}
+    log = []
+    if os.path.exists(args.log):
+        log = json.load(open(args.log))
+    log.append(res)
+    json.dump(log, open(args.log, "w"), indent=1)
+    print(f"[hillclimb] logged '{args.tag}' -> {args.log}")
+
+
+if __name__ == "__main__":
+    main()

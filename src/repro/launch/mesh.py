@@ -1,0 +1,39 @@
+"""Production mesh definitions (multi-pod dry-run §0/§1).
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked on first backend init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "fsdp_axes", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU training)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def fsdp_axes(mesh) -> tuple[str, ...]:
+    """Axes parameters/optimizer state are additionally sharded over
+    (ZeRO-3): the pod axis (if present) plus the data axis."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return fsdp_axes(mesh)

@@ -1,0 +1,114 @@
+"""Serving launcher: prefill + batched decode with a KV/SSM cache.
+
+CPU-scale demo (smoke configs) and the TPU entry point (full configs via
+the production mesh). Requests are batched; decode runs one jit'd
+serve_step per token over the shared cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.distributed import sharding
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import transformer as T
+
+
+class Server:
+    """Batched LM server: prefill once, then step the decode cache."""
+
+    def __init__(self, cfg, mesh, *, strategy: str = "fsdp", seed: int = 0):
+        self.cfg, self.mesh = cfg, mesh
+        st = sharding.Strategy(mesh, strategy)
+        self.cfg = cfg = cfg.replace(tp_size=st.tp_size, batch_axes=st.batch)
+        with mesh:
+            key = jax.random.PRNGKey(seed)
+            pshape = jax.eval_shape(lambda k: T.init_model(k, cfg), key)
+            psh = sharding.param_shardings(st, pshape)
+            self.params = jax.jit(
+                lambda k: T.init_model(k, cfg), out_shardings=psh
+            )(key)
+            self._decode = jax.jit(
+                lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos)
+            )
+        self.st = st
+
+    def generate(
+        self, prompts: np.ndarray, gen_len: int, *, greedy: bool = True
+    ) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, gen_len) int32."""
+        cfg = self.cfg
+        b, plen = prompts.shape
+        max_len = plen + gen_len + 1
+        with self.mesh:
+            caches = T.init_cache(cfg, b, max_len)
+            # prefill token-by-token through the decode path keeps one code
+            # path; a production server would jit T.prefill (we lower it in
+            # the dry-run) — here prompt lengths are tiny.
+            logits = None
+            for i in range(plen):
+                logits, caches = self._decode(
+                    self.params, caches, jnp.asarray(prompts[:, i]),
+                    jnp.asarray(i, jnp.int32),
+                )
+            out = []
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for j in range(gen_len):
+                out.append(np.asarray(tok))
+                logits, caches = self._decode(
+                    self.params, caches, tok,
+                    jnp.asarray(plen + j, jnp.int32),
+                )
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return np.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_NAMES, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sparse", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (
+        registry.get_smoke(args.arch, sparse=args.sparse)
+        if args.smoke
+        else registry.get(args.arch, sparse=args.sparse)
+    )
+    if not cfg.embed_inputs:
+        raise SystemExit(
+            f"{args.arch} has a stub modality frontend; serve the backbone "
+            "via the dry-run (decode_32k) instead"
+        )
+    mesh = (
+        make_production_mesh() if args.production_mesh else make_local_mesh()
+    )
+    server = Server(cfg, mesh, strategy=args.strategy)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32
+    )
+    t0 = time.perf_counter()
+    out = server.generate(prompts, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(out[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run §2).
+
+``input_specs(cfg, shape)`` returns the *data* inputs for the step kind
+(train batch / prefill batch / decode cache+token), weak-type-correct and
+shardable, with zero device allocation. ``state_specs`` /
+``decode_state_specs`` build the parameter/optimizer/cache stand-ins via
+``jax.eval_shape`` on the real initializers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.training.optimizer import OptConfig, init_opt_state
+
+__all__ = ["input_specs", "state_specs", "decode_cache_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch-input ShapeDtypeStructs for one (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.embed_inputs:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        else:
+            batch["embeds"] = _sds((b, s, cfg.d_model), cfg.jdtype)
+        if cfg.mrope_sections:
+            batch["positions"] = _sds(
+                (b, s, len(cfg.mrope_sections)), jnp.int32
+            )
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+        return batch
+    if shape.kind == "decode":
+        return {
+            "tokens": _sds((b,), jnp.int32),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: T.init_model(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: OptConfig):
+    p = params_specs(cfg)
+    opt = jax.eval_shape(lambda q: init_opt_state(opt_cfg, q), p)
+    return {"params": p, "opt": opt}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

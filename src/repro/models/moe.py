@@ -1,0 +1,223 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k (DeepSeekMoE-style).
+
+Dispatch is sort-based (token permutation into per-expert capacity buffers),
+not one-hot-einsum, so the compiled FLOPs are the *activated* FLOPs — this
+matters for honest roofline accounting and is also the right TPU strategy
+(dense per-expert GEMMs on contiguous buffers feed the MXU).
+
+Routing is performed independently per "routing group" (set by the launcher
+to the number of data shards) so the sort/scatter never crosses the data
+axis — the only cross-device traffic is the expert-parallel all-to-all that
+GSPMD inserts around the (groups, experts, capacity, d) buffer.
+
+Expert FFN weights are stored stacked as (E, ...) and carry the Pixelfly
+parameterization when ``cfg.sparse`` is set (paper's technique applied to
+expert GEMMs; the tiny router stays dense).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import budget as budget_lib
+from repro.core import butterfly
+from repro.models.layers import MlpSpec, apply_mlp, constrain, init_mlp
+
+__all__ = ["MoeSpec", "init_moe", "apply_moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    cfg: ModelConfig
+
+    @property
+    def n_exp(self) -> int:
+        return self.cfg.moe_num_experts
+
+    @property
+    def d_ff(self) -> int:
+        return self.cfg.moe_d_ff
+
+    def sparse_layout(self, din: int, dout: int):
+        """(cols, r, rank) of the pixelfly pattern for an expert GEMM."""
+        c = self.cfg
+        rank, max_stride = budget_lib.split_sparse_lowrank(
+            dout, din, c.sparse_density, block=c.sparse_block,
+            lowrank_frac=c.lowrank_frac,
+        )
+        pat = butterfly.make_pattern(
+            dout, din, block=c.sparse_block, max_stride=max_stride
+        )
+        return pat, rank
+
+
+def _init_expert_dense(key, e, din, dout, dtype):
+    std = 1.0 / math.sqrt(din)
+    return (
+        jax.random.normal(key, (e, din, dout), jnp.float32) * std
+    ).astype(dtype)
+
+
+def _init_expert_sparse(key, e, spec: MoeSpec, din, dout):
+    c = spec.cfg
+    pat, rank = spec.sparse_layout(din, dout)
+    kb, ku, kv = jax.random.split(key, 3)
+    b = c.sparse_block
+    return {
+        "blocks": (
+            jax.random.normal(
+                kb, (e, pat.nb_out, pat.r, b, b), jnp.float32
+            )
+            / math.sqrt(pat.r * b)
+        ).astype(c.jdtype),
+        "U": (
+            jax.random.normal(ku, (e, din, rank), jnp.float32)
+            / math.sqrt(din)
+        ).astype(c.jdtype),
+        "V": (
+            jax.random.normal(kv, (e, dout, rank), jnp.float32)
+            / math.sqrt(rank)
+        ).astype(c.jdtype),
+        "gamma": jnp.full((e,), 0.5, jnp.float32),
+    }
+
+
+def init_moe(key: jax.Array, spec: MoeSpec) -> dict:
+    c = spec.cfg
+    ks = jax.random.split(key, 6)
+    e, d, f = spec.n_exp, c.d_model, spec.d_ff
+    p: dict = {
+        "router": (
+            jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5
+        ).astype(jnp.float32)
+    }
+    if c.sparse:
+        p["wg"] = _init_expert_sparse(ks[1], e, spec, d, f)
+        p["wu"] = _init_expert_sparse(ks[2], e, spec, d, f)
+        p["wd"] = _init_expert_sparse(ks[3], e, spec, f, d)
+    else:
+        p["wg"] = _init_expert_dense(ks[1], e, d, f, c.jdtype)
+        p["wu"] = _init_expert_dense(ks[2], e, d, f, c.jdtype)
+        p["wd"] = _init_expert_dense(ks[3], e, f, d, c.jdtype)
+    if c.moe_num_shared:
+        shared = MlpSpec(c, c.moe_num_shared * spec.d_ff)
+        p["shared"] = init_mlp(ks[4], shared)
+    return p
+
+
+def _expert_matmul(spec: MoeSpec, w, x: jax.Array, din: int, dout: int):
+    """x (G, E, C, din) @ per-expert weight -> (G, E, C, dout)."""
+    c = spec.cfg
+    if not c.sparse:
+        return jnp.einsum("gecd,edf->gecf", x, w).astype(x.dtype)
+    pat, _ = spec.sparse_layout(din, dout)
+    b = c.sparse_block
+    cols = jnp.asarray(pat.cols)  # (nb_out, r)
+
+    @jax.checkpoint
+    def _bsr(xx, blocks):
+        xb = xx.reshape(*xx.shape[:-1], din // b, b)
+        y = None
+        for t in range(pat.r):
+            xg = jnp.take(xb, cols[:, t], axis=-2)  # (G,E,C,nb_out,b)
+            yt = jnp.einsum("gecik,eikm->gecim", xg, blocks[:, :, t])
+            y = yt if y is None else y + yt
+        return y.reshape(*xx.shape[:-1], pat.nb_out * b)
+
+    ys = _bsr(x, w["blocks"])
+    xu = jnp.einsum("gecd,edr->gecr", x, w["U"])
+    yl = jnp.einsum("gecr,eor->geco", xu, w["V"]).astype(jnp.float32)
+    g = w["gamma"][None, :, None, None].astype(jnp.float32)
+    return (g * ys + (1.0 - g) * yl).astype(x.dtype)
+
+
+def _expert_ffn(spec: MoeSpec, params: dict, x: jax.Array) -> jax.Array:
+    c = spec.cfg
+    d, f = c.d_model, spec.d_ff
+    gate = _expert_matmul(spec, params["wg"], x, d, f)
+    up = _expert_matmul(spec, params["wu"], x, d, f)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return _expert_matmul(spec, params["wd"], h, f, d)
+
+
+def apply_moe(
+    spec: MoeSpec,
+    params: dict,
+    x: jax.Array,
+    *,
+    impl: str | None = None,
+) -> tuple[jax.Array, dict]:
+    """x (B, S, D) -> (y, aux) with aux = {"lb_loss": load-balance loss}."""
+    c = spec.cfg
+    b, s, d = x.shape
+    e, k = spec.n_exp, c.moe_top_k
+    tokens = b * s
+    groups = max(1, min(c.moe_routing_groups, tokens))
+    while tokens % groups:
+        groups -= 1
+    t = tokens // groups
+    xf = x.reshape(groups, t, d)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32), params["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (g, t, k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = probs.mean(axis=1)  # (g, e)
+    ce = (
+        jnp.zeros((groups, e))
+        .at[jnp.arange(groups)[:, None, None], idx]
+        .add(1.0)
+        / (t * k)
+    )
+    lb_loss = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    cap = int(c.moe_capacity_factor * t * k / e)
+    cap = max(8, int(math.ceil(cap / 8) * 8))
+
+    fe = idx.reshape(groups, t * k)  # flat expert ids
+    order = jnp.argsort(fe, axis=-1, stable=True)  # (g, tk)
+    se = jnp.take_along_axis(fe, order, axis=-1)  # sorted expert ids
+    tok = order // k  # originating token
+    # position within expert segment
+    starts = jax.vmap(lambda a: jnp.searchsorted(a, jnp.arange(e)))(se)  # (g, e)
+    pos = jnp.arange(t * k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < cap
+    posc = jnp.where(keep, pos, 0)
+
+    gi = jnp.arange(groups)[:, None]
+    xs = jnp.take_along_axis(
+        xf, tok[..., None], axis=1
+    )  # (g, tk, d) tokens sorted by expert
+    xs = jnp.where(keep[..., None], xs, 0)
+    buf = jnp.zeros((groups, e, cap, d), x.dtype)
+    buf = buf.at[gi, se, posc].add(xs)
+
+    # NOTE(§Perf A1, refuted): forcing (data, model) sharding on buf/yb
+    # here made collectives 3.7x WORSE — GSPMD reshards the scatter/gather
+    # around the anchor instead of routing through it. Kept off; the
+    # winning change was A2 (see EXPERIMENTS.md).
+
+    yb = _expert_ffn(spec, params, buf)  # (g, e, cap, d)
+
+    ys = yb[gi, se, posc]  # (g, tk, d)
+    ys = jnp.where(keep[..., None], ys, 0)
+    gflat = jnp.take_along_axis(gates.reshape(groups, t * k), order, axis=-1)
+    y = jnp.zeros((groups, t, d), jnp.float32)
+    y = y.at[gi, tok].add(ys.astype(jnp.float32) * gflat[..., None])
+    y = y.astype(x.dtype).reshape(b, s, d)
+
+    if c.moe_num_shared:
+        shared = MlpSpec(c, c.moe_num_shared * spec.d_ff)
+        y = y + apply_mlp(shared, params["shared"], x, impl=impl)
+    return y, {"lb_loss": lb_loss}

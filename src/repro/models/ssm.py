@@ -1,0 +1,276 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in JAX.
+
+Chunked SSD for training/prefill (quadratic within a chunk, linear across
+chunks) and the O(1) recurrent step for decode. Input/output projections are
+the GEMMs the paper's technique applies to — they carry the Pixelfly
+sparse+low-rank parameterization when ``cfg.sparse`` is set; the SSD scan
+itself is an activation recurrence with no weight GEMM (butterfly
+inapplicable there, see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pixelfly import LinearSpec, apply_linear, init_linear
+
+__all__ = ["SsmSpec", "init_ssm", "apply_ssm_train", "apply_ssm_decode", "init_ssm_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmSpec:
+    cfg: ModelConfig
+
+    @property
+    def d_inner(self) -> int:
+        return self.cfg.d_inner
+
+    @property
+    def heads(self) -> int:
+        return self.cfg.ssm_heads
+
+    @property
+    def conv_dim(self) -> int:
+        c = self.cfg
+        return self.d_inner + 2 * c.ssm_groups * c.ssm_state
+
+    @property
+    def in_dim(self) -> int:
+        # z, xBC, dt
+        return 2 * self.d_inner + 2 * self.cfg.ssm_groups * self.cfg.ssm_state + self.heads
+
+    def _lin(self, din: int, dout: int) -> LinearSpec:
+        c = self.cfg
+        if c.sparse and din % c.sparse_block == 0 and dout % c.sparse_block == 0:
+            return LinearSpec.pixelfly(
+                din,
+                dout,
+                c.sparse_density,
+                block=c.sparse_block,
+                lowrank_frac=c.lowrank_frac,
+                dtype=c.jdtype,
+            )
+        return LinearSpec.dense(din, dout, dtype=c.jdtype)
+
+    @property
+    def in_proj(self) -> LinearSpec:
+        return self._lin(self.cfg.d_model, self.in_dim)
+
+    @property
+    def out_proj(self) -> LinearSpec:
+        return self._lin(self.d_inner, self.cfg.d_model)
+
+
+def init_ssm(key: jax.Array, spec: SsmSpec) -> dict:
+    c = spec.cfg
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = spec.heads
+    dt = jnp.exp(
+        jax.random.uniform(k3, (h,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": init_linear(k1, spec.in_proj),
+        "out_proj": init_linear(k2, spec.out_proj),
+        "conv_w": (
+            jax.random.normal(k2, (c.ssm_conv, spec.conv_dim), jnp.float32)
+            / math.sqrt(c.ssm_conv)
+        ).astype(c.jdtype),
+        "conv_b": jnp.zeros((spec.conv_dim,), c.jdtype),
+        "A_log": jnp.log(
+            jnp.arange(1, h + 1, dtype=jnp.float32)
+        ),  # A in [-1, -h]
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "norm": jnp.ones((spec.d_inner,), jnp.float32),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) -> (..., L, L) with out[i, j] = sum_{j<k<=i} x[k], -inf above diag."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32 (post-softplus)
+    A: jax.Array,  # (H,) fp32, negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+):
+    """SSD: y_t = C_t^T (sum_{s<=t} prod(decay) dt_s B_s x_s).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 padding is exact: decay exp(0*A)=1, input dt*B*x = 0.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    c = s_pad // chunk
+    xc = (x * dt[..., None]).reshape(b, c, chunk, h, p).astype(jnp.float32)
+    dA = (dt * A[None, None, :]).reshape(b, c, chunk, h)  # (b,c,l,h)
+    Bc = Bm.reshape(b, c, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, c, chunk, n).astype(jnp.float32)
+
+    dA_cs = jnp.cumsum(dA, axis=2)  # (b,c,l,h)
+
+    # --- intra-chunk (block-diagonal) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b,c,h,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (b,c,l,s)
+    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", L, scores, xc)
+
+    # --- chunk-final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xc)
+
+    # --- inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b,c,h)
+
+    def scan_fn(prev, inp):
+        dec, st = inp  # dec (b,h), st (b,h,p,n)
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (b,c,h,p,n): state entering chunk
+
+    # --- inter-chunk output term
+    state_decay = jnp.exp(dA_cs)  # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s_pad, h, p)
+    return y[:, :s], final_state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return y + b[None, None, :]
+
+
+def _split_zxbcdt(spec: SsmSpec, zxbcdt: jax.Array):
+    c = spec.cfg
+    di, n = spec.d_inner, c.ssm_groups * c.ssm_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + spec.conv_dim]
+    dt = zxbcdt[..., di + spec.conv_dim :]
+    return z, xBC, dt
+
+
+def _gated_norm(scale: jax.Array, y: jax.Array, z: jax.Array, eps: float):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def apply_ssm_train(
+    spec: SsmSpec,
+    params: dict,
+    x: jax.Array,
+    *,
+    impl: str | None = None,
+    return_state: bool = False,
+):
+    """Full-sequence forward. x (B, S, D) -> (y, cache-or-None)."""
+    c = spec.cfg
+    b, s, _ = x.shape
+    h, p, n = spec.heads, c.ssm_head_dim, c.ssm_state
+    zxbcdt = apply_linear(spec.in_proj, params["in_proj"], x, impl=impl)
+    z, xBC_pre, dt = _split_zxbcdt(spec, zxbcdt)
+    xBC = _causal_conv(xBC_pre, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., : spec.d_inner].reshape(b, s, h, p)
+    Bm = xBC[..., spec.d_inner : spec.d_inner + n]
+    Cm = xBC[..., spec.d_inner + n :]
+    dtf = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(params["A_log"])
+    y, final_state = _ssd_chunked(xs, dtf, A, Bm, Cm, c.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, spec.d_inner).astype(x.dtype)
+    y = _gated_norm(params["norm"], y, z, c.norm_eps)
+    out = apply_linear(spec.out_proj, params["out_proj"], y, impl=impl)
+    cache = None
+    if return_state:
+        cache = {
+            "conv": xBC_pre[:, -(c.ssm_conv - 1) :, :],
+            "state": final_state,
+        }
+    return out, cache
+
+
+def init_ssm_cache(spec: SsmSpec, batch: int, dtype) -> dict:
+    c = spec.cfg
+    return {
+        "conv": jnp.zeros((batch, c.ssm_conv - 1, spec.conv_dim), dtype),
+        "state": jnp.zeros(
+            (batch, spec.heads, c.ssm_head_dim, c.ssm_state), jnp.float32
+        ),
+    }
+
+
+def apply_ssm_decode(
+    spec: SsmSpec,
+    params: dict,
+    x: jax.Array,
+    cache: dict,
+    *,
+    impl: str | None = None,
+):
+    """One-token step. x (B, 1, D) -> (y (B,1,D), new cache)."""
+    c = spec.cfg
+    b = x.shape[0]
+    h, p, n = spec.heads, c.ssm_head_dim, c.ssm_state
+    zxbcdt = apply_linear(spec.in_proj, params["in_proj"], x, impl=impl)
+    z, xBC, dt = _split_zxbcdt(spec, zxbcdt)
+    # conv cache: (B, K-1, conv_dim) of pre-conv activations
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, K, C)
+    new_conv = window[:, 1:, :]
+    w = params["conv_w"]
+    y = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"][None, :]
+    xBC1 = jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    xs = xBC1[..., : spec.d_inner].reshape(b, h, p)
+    Bm = xBC1[:, 0, spec.d_inner : spec.d_inner + n].astype(jnp.float32)
+    Cm = xBC1[:, 0, spec.d_inner + n :].astype(jnp.float32)
+    dtf = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"][None, :]
+    )  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dtf * A[None, :])  # (B, H)
+    dBx = jnp.einsum(
+        "bh,bn,bhp->bhpn", dtf, Bm, xs.astype(jnp.float32)
+    )
+    state = cache["state"] * dA[..., None, None] + dBx
+    yh = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    yh = yh + params["D"][None, :, None] * xs.astype(jnp.float32)
+    yh = yh.reshape(b, 1, spec.d_inner).astype(x.dtype)
+    yh = _gated_norm(params["norm"], yh, z, c.norm_eps)
+    out = apply_linear(spec.out_proj, params["out_proj"], yh, impl=impl)
+    return out, {"conv": new_conv, "state": state}

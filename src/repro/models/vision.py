@@ -1,0 +1,194 @@
+"""ViT and MLP-Mixer — the paper's own §5.1 base models.
+
+These carry the same Pixelfly parameterization through
+``repro.core.pixelfly`` (linear layers) and the block-sparse attention path,
+and are used by the vision benchmarks (Fig. 5 / Table 4 reproduction) and
+the NTK-distance experiment (Fig. 4). They run at CPU scale here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pixelfly import LinearSpec, apply_linear, init_linear
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+__all__ = [
+    "VisionConfig",
+    "init_vit",
+    "apply_vit",
+    "init_mixer",
+    "apply_mixer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    kind: str  # "vit" | "mixer"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    num_patches: int
+    num_classes: int
+    patch_dim: int  # flattened patch pixels (stubbed patchifier input)
+    token_ff: int = 0  # mixer token-mixing hidden dim
+    sparse: bool = False
+    sparse_density: float = 0.25
+    sparse_block: int = 32
+    lowrank_frac: float = 0.25
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def lin(self, din: int, dout: int) -> LinearSpec:
+        if self.sparse and din % self.sparse_block == 0 and dout % self.sparse_block == 0:
+            return LinearSpec.pixelfly(
+                din,
+                dout,
+                self.sparse_density,
+                block=self.sparse_block,
+                lowrank_frac=self.lowrank_frac,
+                dtype=self.jdtype,
+            )
+        return LinearSpec.dense(din, dout, dtype=self.jdtype)
+
+
+def _init_mlp(key, cfg: VisionConfig, din: int, dff: int, dout: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": init_linear(k1, cfg.lin(din, dff)),
+        "w2": init_linear(k2, cfg.lin(dff, dout)),
+    }
+
+
+def _apply_mlp(cfg: VisionConfig, p, x, din, dff, dout):
+    h = apply_linear(cfg.lin(din, dff), p["w1"], x)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(cfg.lin(dff, dout), p["w2"], h)
+
+
+# ----------------------------------------------------------------------
+# ViT
+# ----------------------------------------------------------------------
+
+
+def init_vit(key: jax.Array, cfg: VisionConfig) -> dict:
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    d = cfg.d_model
+    params = {
+        "patch": init_linear(ks[0], LinearSpec.dense(cfg.patch_dim, d, dtype=cfg.jdtype)),
+        "pos": (jax.random.normal(ks[1], (cfg.num_patches + 1, d)) * 0.02).astype(cfg.jdtype),
+        "cls": jnp.zeros((d,), cfg.jdtype),
+        "head": init_linear(ks[2], LinearSpec.dense(d, cfg.num_classes, dtype=cfg.jdtype)),
+        "final_norm": init_rmsnorm(d),
+        "layers": [],
+    }
+    layers = []
+    for i in range(cfg.num_layers):
+        k1, k2, k3 = jax.random.split(ks[3 + i], 3)
+        layers.append(
+            {
+                "n1": init_rmsnorm(d),
+                "qkv": init_linear(k1, cfg.lin(d, 3 * d)),
+                "proj": init_linear(k2, cfg.lin(d, d)),
+                "n2": init_rmsnorm(d),
+                "mlp": _init_mlp(k3, cfg, d, cfg.d_ff, d),
+            }
+        )
+    params["layers"] = layers
+    return params
+
+
+def apply_vit(cfg: VisionConfig, params: dict, patches: jax.Array) -> jax.Array:
+    """patches: (B, num_patches, patch_dim) -> logits (B, num_classes)."""
+    b = patches.shape[0]
+    d, h = cfg.d_model, cfg.num_heads
+    x = apply_linear(
+        LinearSpec.dense(cfg.patch_dim, d, dtype=cfg.jdtype),
+        params["patch"],
+        patches.astype(cfg.jdtype),
+    )
+    cls = jnp.broadcast_to(params["cls"][None, None], (b, 1, d))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"][None]
+    hd = d // h
+    for p in params["layers"]:
+        y = rmsnorm(p["n1"], x)
+        qkv = apply_linear(cfg.lin(d, 3 * d), p["qkv"], y)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        s = x.shape[1]
+        q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) * hd ** -0.5
+        att = jax.nn.softmax(att.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + apply_linear(cfg.lin(d, d), p["proj"], o)
+        y = rmsnorm(p["n2"], x)
+        x = x + _apply_mlp(cfg, p["mlp"], y, d, cfg.d_ff, d)
+    x = rmsnorm(params["final_norm"], x)
+    return apply_linear(
+        LinearSpec.dense(d, cfg.num_classes, dtype=cfg.jdtype),
+        params["head"],
+        x[:, 0],
+    ).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# MLP-Mixer
+# ----------------------------------------------------------------------
+
+
+def init_mixer(key: jax.Array, cfg: VisionConfig) -> dict:
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    d, s = cfg.d_model, cfg.num_patches
+    tf = cfg.token_ff or cfg.d_ff // 2
+    params = {
+        "patch": init_linear(ks[0], LinearSpec.dense(cfg.patch_dim, d, dtype=cfg.jdtype)),
+        "head": init_linear(ks[1], LinearSpec.dense(d, cfg.num_classes, dtype=cfg.jdtype)),
+        "final_norm": init_rmsnorm(d),
+        "layers": [],
+    }
+    layers = []
+    for i in range(cfg.num_layers):
+        k1, k2 = jax.random.split(ks[2 + i])
+        layers.append(
+            {
+                "n1": init_rmsnorm(d),
+                "token_mlp": _init_mlp(k1, cfg, s, tf, s),
+                "n2": init_rmsnorm(d),
+                "chan_mlp": _init_mlp(k2, cfg, d, cfg.d_ff, d),
+            }
+        )
+    params["layers"] = layers
+    return params
+
+
+def apply_mixer(cfg: VisionConfig, params: dict, patches: jax.Array) -> jax.Array:
+    """patches: (B, num_patches, patch_dim) -> logits (B, num_classes)."""
+    d, s = cfg.d_model, cfg.num_patches
+    tf = cfg.token_ff or cfg.d_ff // 2
+    x = apply_linear(
+        LinearSpec.dense(cfg.patch_dim, d, dtype=cfg.jdtype),
+        params["patch"],
+        patches.astype(cfg.jdtype),
+    )
+    for p in params["layers"]:
+        y = rmsnorm(p["n1"], x).swapaxes(1, 2)  # (B, D, S)
+        y = _apply_mlp(cfg, p["token_mlp"], y, s, tf, s)
+        x = x + y.swapaxes(1, 2)
+        y = rmsnorm(p["n2"], x)
+        x = x + _apply_mlp(cfg, p["chan_mlp"], y, d, cfg.d_ff, d)
+    x = rmsnorm(params["final_norm"], x)
+    return apply_linear(
+        LinearSpec.dense(d, cfg.num_classes, dtype=cfg.jdtype),
+        params["head"],
+        x.mean(axis=1),
+    ).astype(jnp.float32)

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing.
+
+Properties required at 1000-node scale and implemented here:
+
+- **atomic**: written to ``step_XXXX.tmp`` then ``os.rename``d, so a
+  preemption mid-write never corrupts the latest checkpoint.
+- **integrity-checked**: a manifest (JSON) records per-array shape/dtype
+  and a CRC32; restore verifies before handing arrays to the trainer.
+- **layout-agnostic (elastic)**: arrays are saved *unsharded by logical
+  name*, not by device layout, so a run can restart on a different mesh
+  (e.g. after losing a pod) — the trainer re-applies its own shardings via
+  ``jax.device_put``.
+- **resumable data**: the data-iterator state (seed, step) and RNG key are
+  part of the checkpoint, so restart is bitwise-continuable.
+- retention: keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointError"]
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    *,
+    extra: dict | None = None,
+    keep: int = 3,
+) -> str:
+    """Atomically write checkpoint for ``step``. Returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "arrays": {}}
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **flat)
+    for k, v in flat.items():
+        manifest["arrays"][k] = {
+            "shape": list(v.shape),
+            "dtype": str(v.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    for d in os.listdir(ckpt_dir):  # stale partial writes
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    template: Any,
+    *,
+    step: int | None = None,
+    shardings: Any = None,
+) -> tuple[Any, dict]:
+    """Restore into the structure of ``template``; verify CRCs; optionally
+    re-place onto ``shardings`` (elastic restart on a new mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise CheckpointError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        if key not in manifest["arrays"]:
+            raise CheckpointError(f"missing array {key!r} in checkpoint")
+        meta = manifest["arrays"][key]
+        arr = data[key]
+        if list(arr.shape) != meta["shape"] or str(arr.dtype) != meta["dtype"]:
+            raise CheckpointError(f"metadata mismatch for {key!r}")
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
+            raise CheckpointError(f"CRC mismatch for {key!r} (corrupt file)")
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise CheckpointError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs model {leaf.shape}"
+            )
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings
+        )
+    return tree, manifest["extra"]

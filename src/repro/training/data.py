@@ -1,0 +1,113 @@
+"""Data pipeline: deterministic, resumable token streams.
+
+Two sources:
+- ``SyntheticLM``: a seeded Markov-ish token generator — cheap, infinite,
+  and *step-addressable* (batch(step) is a pure function of (seed, step)),
+  which makes checkpoint-resume trivially exact and lets any host compute
+  its own shard without coordination (the property a 1000-node input
+  pipeline needs).
+- ``TextFileLM``: byte-level tokenization of a local file with the same
+  step-addressable contract.
+
+Batches are {"tokens", "labels"} with labels = next-token shift. For
+stub-frontend archs (vlm/audio), ``EmbedsWrapper`` converts tokens to
+deterministic pseudo-embeddings of the right width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "TextFileLM", "EmbedsWrapper"]
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step])
+        )
+        b, s, v = self.batch_size, self.seq_len, self.vocab_size
+        # structured stream: a noisy cyclic pattern so a real model can
+        # actually reduce loss (used by convergence/integration tests)
+        base = rng.integers(0, v, size=(b, 1))
+        steps = rng.integers(1, 7, size=(b, 1))
+        seq = (base + steps * np.arange(s + 1)[None, :]) % v
+        noise = rng.random((b, s + 1)) < 0.05
+        seq = np.where(noise, rng.integers(0, v, size=(b, s + 1)), seq)
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+        }
+
+    def state(self) -> dict:
+        return {"seed": self.seed}
+
+
+@dataclasses.dataclass
+class TextFileLM:
+    path: str
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        with open(self.path, "rb") as f:
+            self._data = np.frombuffer(f.read(), dtype=np.uint8)
+        if len(self._data) < self.seq_len + 2:
+            raise ValueError("file too small for seq_len")
+
+    @property
+    def vocab_size(self) -> int:
+        return 256
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step])
+        )
+        n = len(self._data) - self.seq_len - 1
+        starts = rng.integers(0, n, size=self.batch_size)
+        toks = np.stack(
+            [self._data[s : s + self.seq_len + 1] for s in starts]
+        ).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "path": self.path}
+
+
+@dataclasses.dataclass
+class EmbedsWrapper:
+    """Stub modality frontend: maps token batches to deterministic
+    pseudo-embeddings (B, S, d_model) — the [vlm]/[audio] contract."""
+
+    inner: object
+    d_model: int
+    n_pos_streams: int = 0  # 3 for M-RoPE
+
+    def batch(self, step: int) -> dict:
+        b = self.inner.batch(step)
+        toks = b["tokens"]
+        bsz, s = toks.shape
+        rng = np.random.default_rng(0)
+        table = rng.standard_normal((self.inner.vocab_size, self.d_model)).astype(
+            np.float32
+        ) * 0.02
+        out = {"embeds": table[toks], "labels": b["labels"]}
+        if self.n_pos_streams:
+            pos = np.broadcast_to(
+                np.arange(s, dtype=np.int32)[None, :, None],
+                (bsz, s, self.n_pos_streams),
+            )
+            out["positions"] = np.ascontiguousarray(pos)
+        return out
+
+    def state(self) -> dict:
+        return self.inner.state()

@@ -1,0 +1,263 @@
+"""Training loop with the fault-tolerance features a 1000-node run needs:
+
+- checkpoint/restart (atomic, integrity-checked, elastic across meshes)
+- preemption handling (SIGTERM/SIGINT -> checkpoint -> clean exit)
+- straggler detection (step-time EWMA watchdog; on a real cluster the
+  callback would trigger hot-spare promotion / re-slicing — here it logs
+  and counts, and the hook is injectable for tests)
+- deterministic resume of the data stream (step-addressable batches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models import transformer as T
+from repro.training import checkpoint as ckpt_lib
+from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
+
+__all__ = ["TrainConfig", "make_train_step", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep: int = 3
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+def make_train_step(
+    model_cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    *,
+    impl: str | None = None,
+    microbatches: int = 1,
+) -> Callable:
+    """Pure (state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch is
+    split into k sequential microbatches (a lax.scan), bounding live
+    activations to one microbatch — how a 67B model trains at
+    global_batch 256 x 4096 without 100+ GB of residual-carry per device.
+    """
+
+    def loss_fn(params, mb):
+        return T.forward_train(model_cfg, params, mb, impl=impl)
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(state["params"], batch)
+        else:
+            k = microbatches
+            ba = model_cfg.batch_axes or None
+
+            def split(a):
+                a = a.reshape(k, a.shape[0] // k, *a.shape[1:])
+                return a
+
+            batch_r = jax.tree.map(split, batch)
+
+            def micro(carry, mb):
+                gsum, lsum, msum = carry
+                if ba is not None:
+                    from jax.sharding import PartitionSpec as P
+
+                    mb = jax.tree.map(
+                        lambda a: jax.lax.with_sharding_constraint(
+                            a, P(ba, *([None] * (a.ndim - 1)))
+                        )
+                        if a.ndim >= 1
+                        else a,
+                        mb,
+                    )
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(state["params"], mb)
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(s.dtype), gsum, g
+                )
+                msum = jax.tree.map(lambda s, x: s + x, msum, metrics)
+                return (gsum, lsum + loss, msum), None
+
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            mz = {"nll": jnp.zeros(()), "lb_loss": jnp.zeros(())}
+            (gsum, lsum, msum), _ = jax.lax.scan(
+                micro, (gz, jnp.zeros(()), mz), batch_r
+            )
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+            metrics = jax.tree.map(lambda m: m / k, msum)
+        new_params, new_opt, opt_m = apply_updates(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        out = {"loss": loss, **metrics, **opt_m}
+        return {"params": new_params, "opt": new_opt}, out
+
+    return train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        opt_cfg: OptConfig,
+        data,
+        mesh,
+        train_cfg: TrainConfig = TrainConfig(),
+        *,
+        strategy: str = "fsdp",
+        impl: str | None = None,
+        straggler_hook: Callable[[int, float, float], None] | None = None,
+    ):
+        self.model_cfg, self.opt_cfg = model_cfg, opt_cfg
+        self.data, self.mesh, self.cfg = data, mesh, train_cfg
+        self.step = 0
+        self._preempted = False
+        self._straggler_hook = straggler_hook
+        self.straggler_events = 0
+        self._ewma: float | None = None
+
+        st = sharding.Strategy(mesh, strategy)
+        self.strategy = st
+        self.model_cfg = model_cfg = model_cfg.replace(
+            tp_size=st.tp_size, batch_axes=st.batch
+        )
+        with mesh:
+            key = jax.random.PRNGKey(train_cfg.seed)
+            params_shape = jax.eval_shape(
+                lambda k: T.init_model(k, model_cfg), key
+            )
+            self.param_shardings = sharding.param_shardings(st, params_shape)
+            opt_shape = jax.eval_shape(
+                lambda p: init_opt_state(opt_cfg, p), params_shape
+            )
+            self.state_shardings = {
+                "params": self.param_shardings,
+                "opt": {
+                    "step": sharding.named(
+                        mesh, jax.tree.map(lambda _: jax.sharding.PartitionSpec(), opt_shape["step"])
+                    ),
+                    "mu": sharding.param_shardings(st, opt_shape["mu"]),
+                    "nu": sharding.param_shardings(st, opt_shape["nu"]),
+                    **(
+                        {"ef": sharding.param_shardings(st, opt_shape["ef"])}
+                        if "ef" in opt_shape
+                        else {}
+                    ),
+                },
+            }
+            example = self.data.batch(0)
+            self.batch_shardings = sharding.named(
+                st, sharding.batch_specs(st, example)
+            )
+            self._step_fn = jax.jit(
+                make_train_step(model_cfg, opt_cfg, impl=impl),
+                in_shardings=(self.state_shardings, self.batch_shardings),
+                out_shardings=(self.state_shardings, None),
+                donate_argnums=(0,),
+            )
+
+        # try restore, else init
+        last = ckpt_lib.latest_step(train_cfg.ckpt_dir)
+        template = {
+            "params": params_shape,
+            "opt": opt_shape,
+        }
+        if last is not None:
+            with mesh:
+                state, extra = ckpt_lib.restore(
+                    train_cfg.ckpt_dir,
+                    template,
+                    shardings=self.state_shardings,
+                )
+            self.state = state
+            self.step = int(extra.get("step", last))
+            print(f"[trainer] restored step {self.step} from {train_cfg.ckpt_dir}")
+        else:
+            with mesh:
+                init = jax.jit(
+                    lambda k: {
+                        "params": (p := T.init_model(k, model_cfg)),
+                        "opt": init_opt_state(opt_cfg, p),
+                    },
+                    out_shardings=self.state_shardings,
+                )
+                self.state = init(key)
+
+        signal.signal(signal.SIGTERM, self._on_preempt)
+
+    # ------------------------------------------------------------------
+    def _on_preempt(self, signum, frame):
+        self._preempted = True
+
+    def checkpoint(self):
+        ckpt_lib.save(
+            self.cfg.ckpt_dir,
+            self.step,
+            self.state,
+            extra={"step": self.step, "data": self.data.state()},
+            keep=self.cfg.keep,
+        )
+
+    def run(self, steps: int | None = None) -> list[dict]:
+        steps = steps if steps is not None else self.cfg.steps
+        history = []
+        with self.mesh:
+            for _ in range(steps):
+                if self._preempted:
+                    print("[trainer] preemption signal: checkpoint + exit")
+                    self.checkpoint()
+                    break
+                batch = jax.device_put(
+                    self.data.batch(self.step), self.batch_shardings
+                )
+                t0 = time.perf_counter()
+                self.state, metrics = self._step_fn(self.state, batch)
+                metrics = jax.tree.map(float, jax.device_get(metrics))
+                dt = time.perf_counter() - t0
+                self._watch(dt)
+                self.step += 1
+                metrics["step"] = self.step
+                metrics["step_time_s"] = dt
+                history.append(metrics)
+                if self.step % self.cfg.log_every == 0:
+                    print(
+                        f"[trainer] step {self.step} loss={metrics['loss']:.4f} "
+                        f"lr={metrics['lr']:.2e} {dt*1e3:.0f}ms"
+                    )
+                if self.step % self.cfg.ckpt_every == 0:
+                    self.checkpoint()
+        return history
+
+    def _watch(self, dt: float):
+        """Straggler watchdog: EWMA of step time; flag outliers."""
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.cfg.straggler_factor * self._ewma:
+            self.straggler_events += 1
+            if self._straggler_hook:
+                self._straggler_hook(self.step, dt, self._ewma)
+            else:
+                print(
+                    f"[trainer] straggler: step took {dt:.3f}s vs "
+                    f"EWMA {self._ewma:.3f}s"
+                )
+        self._ewma = 0.9 * self._ewma + 0.1 * dt

@@ -1,0 +1,117 @@
+"""Optimizer: AdamW + warmup-cosine schedule + global-norm clipping,
+with an optional error-feedback int8 gradient-compression hook.
+
+Self-contained (no optax in this container). State is a plain pytree so it
+shards with the same FSDP rules as parameters and checkpoints trivially.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # beyond-paper: error-feedback int8 gradient compression (models the
+    # numerics of compressed all-reduce; see DESIGN.md §4)
+    compress_grads: bool = False
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1.0) / max(1, cfg.warmup_steps)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t)
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(cfg: OptConfig, params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+    }
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(zeros32, params)  # error-feedback residual
+    return state
+
+
+def _compress_int8(g: jax.Array, residual: jax.Array):
+    """Symmetric per-tensor int8 quantization with error feedback."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.max(jnp.abs(gf)) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    deq = q * scale
+    return deq, gf - deq
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if cfg.compress_grads:
+        pairs = jax.tree.map(_compress_int8, grads, state["ef"])
+        grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_mu = jax.tree.map(
+        lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_nu = jax.tree.map(
+        lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+    if cfg.compress_grads:
+        new_state["ef"] = new_ef
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own flags
+# in its own process). Keep any preexisting flags.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

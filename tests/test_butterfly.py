@@ -1,0 +1,111 @@
+"""Properties of the flat block butterfly pattern (paper Defs 3.1-3.4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import butterfly as bf
+
+
+def test_log2_int():
+    assert bf.log2_int(1) == 0
+    assert bf.log2_int(64) == 6
+    with pytest.raises(ValueError):
+        bf.log2_int(12)
+
+
+def test_strides():
+    assert bf.flat_butterfly_strides(1) == []
+    assert bf.flat_butterfly_strides(2) == [1]
+    assert bf.flat_butterfly_strides(16) == [1, 2, 4, 8]
+
+
+@given(
+    nb=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    ks=st.integers(0, 5),
+)
+@settings(max_examples=50, deadline=None)
+def test_square_cols_structure(nb, ks):
+    k = min(1 << ks, nb)
+    cols = bf.flat_butterfly_cols(nb, nb, k)
+    assert cols.shape == (nb, 1 + len(bf.flat_butterfly_strides(k)))
+    for i in range(nb):
+        assert cols[i, 0] == i  # diagonal slot
+        for t, s in enumerate(bf.flat_butterfly_strides(k)):
+            assert cols[i, 1 + t] == i ^ s  # XOR stride
+        assert (cols[i] < nb).all() and (cols[i] >= 0).all()
+
+
+@given(
+    nbo=st.integers(1, 24),
+    nbi=st.integers(1, 24),
+    ks=st.integers(0, 4),
+)
+@settings(max_examples=60, deadline=None)
+def test_rectangular_cols_in_range(nbo, nbi, ks):
+    cols = bf.flat_butterfly_cols(nbo, nbi, 1 << ks)
+    assert (cols >= 0).all() and (cols < nbi).all()
+
+
+def test_pattern_symmetry_square():
+    """Square flat butterfly pattern is symmetric (i XOR s is an involution)."""
+    p = bf.make_pattern(1024, 1024, block=128, max_stride=8)
+    m = p.dense_mask()
+    assert np.array_equal(m, m.T)
+
+
+def test_nnz_formula():
+    p = bf.make_pattern(2048, 2048, block=128, max_stride=16)
+    r = 1 + 4
+    assert p.r == r
+    assert p.nnz == (2048 // 128) * r * 128 * 128
+    assert abs(p.density - r * 128 / 2048) < 1e-9
+
+
+def test_block_cover_and_density():
+    rng = np.random.default_rng(0)
+    mask = (rng.random((64, 64)) < 0.02).astype(np.float32)
+    cover = bf.block_cover(mask, 8, 8)
+    # cover >= mask, block-aligned
+    assert (cover >= mask).all()
+    c = cover.reshape(8, 8, 8, 8)
+    per_block = c.transpose(0, 2, 1, 3).reshape(64, 64)
+    blocks = cover.reshape(8, 8, 8, 8).any(axis=(1, 3))
+    assert ((cover.reshape(8, 8, 8, 8).sum(axis=(1, 3)) % 64) == 0).all()
+    # density of block cover >= element density (Table 7 phenomenon)
+    assert bf.block_cover_density(mask, 8) >= mask.mean()
+
+
+@given(b=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_butterfly_pattern_block_aligned(b):
+    """The flat block butterfly mask is its own (b, b)-block cover —
+    the hardware-alignment property the paper is built on."""
+    p = bf.make_pattern(32 * b, 32 * b, block=b, max_stride=8)
+    m = p.dense_mask()
+    assert np.array_equal(m, bf.block_cover(m, b, b))
+
+
+def test_block_butterfly_factor_matrix():
+    rng = np.random.default_rng(0)
+    m = bf.butterfly_factor_matrix(8, 4, rng, block=2)
+    # nonzero blocks exactly at (i, i) and (i, i XOR 2) within 4-groups
+    nz = (np.abs(m.reshape(8, 2, 8, 2)).sum(axis=(1, 3)) > 0)
+    for i in range(8):
+        base = (i // 4) * 4
+        expect = {i, base + ((i - base) ^ 2)}
+        assert set(np.nonzero(nz[i])[0]) == expect
+
+
+def test_max_stride_for_density_monotone():
+    prev = 0
+    for d in [0.05, 0.1, 0.2, 0.4, 0.8]:
+        k = bf.max_stride_for_density(4096, 128, d)
+        assert k >= prev
+        prev = k
+
+
+def test_density_never_exceeded():
+    for d in [0.05, 0.1, 0.2, 0.5]:
+        p = bf.make_pattern(4096, 4096, block=128, density=d)
+        assert p.density <= d + 128 / 4096 + 1e-9

@@ -1,0 +1,118 @@
+"""Per-arch smoke tests (assignment (f)): reduced same-family config, one
+forward/train step on CPU, asserting shapes + finiteness; plus a decode
+step through the cache path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.embed_inputs:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32
+        )
+    else:
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)) * 0.1, jnp.float32
+        )
+        if cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :, None],
+                (b, s, len(cfg.mrope_sections)),
+            )
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_NAMES)
+@pytest.mark.parametrize("sparse", [False, True])
+def test_smoke_forward_train(arch, sparse):
+    cfg = registry.get_smoke(arch, sparse=sparse)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = T.forward_train(cfg, params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["nll"]))
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_NAMES)
+def test_smoke_decode(arch):
+    cfg = registry.get_smoke(arch)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    b = 2
+    caches = T.init_cache(cfg, b, 64)
+    logits, caches2 = T.decode_step(
+        cfg, params, caches, jnp.zeros((b,), jnp.int32), jnp.asarray(3, jnp.int32)
+    )
+    assert logits.shape == (b, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_NAMES)
+def test_smoke_prefill(arch):
+    cfg = registry.get_smoke(arch)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, caches = T.prefill(cfg, params, batch)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published numbers."""
+    c = registry.get("deepseek-67b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (95, 8192, 64, 8, 22016, 102400)
+    c = registry.get("qwen3-1.7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.qk_norm) == (28, 2048, 16, 8, 6144, 151936, True)
+    c = registry.get("qwen2-1.5b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.qkv_bias) == (28, 1536, 12, 2, 8960, 151936, True)
+    c = registry.get("smollm-360m")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 960, 15, 5, 2560, 49152)
+    c = registry.get("qwen2-vl-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.mrope_sections) == (
+        28, 3584, 28, 4, 18944, 152064, (16, 24, 24))
+    c = registry.get("deepseek-moe-16b")
+    assert (c.num_layers, c.d_model, c.moe_num_experts, c.moe_top_k,
+            c.moe_num_shared, c.moe_d_ff, c.vocab_size) == (
+        28, 2048, 64, 6, 2, 1408, 102400)
+    c = registry.get("kimi-k2-1t-a32b")
+    assert (c.num_layers, c.d_model, c.moe_num_experts, c.moe_top_k,
+            c.vocab_size) == (61, 7168, 384, 8, 163840)
+    c = registry.get("musicgen-large")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size) == (
+        48, 2048, 32, 8192, 2048)
+    c = registry.get("zamba2-2.7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size,
+            c.ssm_state) == (54, 2560, 32, 10240, 32000, 64)
+    c = registry.get("mamba2-130m")
+    assert (c.num_layers, c.d_model, c.vocab_size, c.ssm_state) == (
+        24, 768, 50280, 128)
+
+
+def test_layer_groups_cover_depth():
+    for arch in registry.ARCH_NAMES:
+        cfg = registry.get(arch)
+        total = sum(g.count for g in cfg.layer_groups())
+        assert total == cfg.num_layers, arch
+
+
+def test_zamba_shares_attention_params():
+    cfg = registry.get_smoke("zamba2-2.7b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    keys = [g.param_key for g in cfg.layer_groups() if g.kind == "shared_attn"]
+    assert len(keys) >= 2 and len(set(keys)) == 1  # one shared subtree
+    assert "shared_attn" in params["groups"]

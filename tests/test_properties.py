@@ -1,0 +1,127 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attn_pattern as ap
+from repro.core import butterfly as bf
+from repro.core.pixelfly import LinearSpec, apply_linear, init_linear
+from repro.kernels import ref
+
+
+@given(
+    nb=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    ts=st.integers(0, 5),
+)
+@settings(max_examples=40, deadline=None)
+def test_square_slots_are_involutive_permutations(nb, ts):
+    """Every stride slot of a square flat butterfly is a self-inverse
+    permutation of block rows (i -> i^s) — the algebraic property that
+    makes the transposed pattern identical to the forward one."""
+    k = min(1 << (ts + 1), nb)
+    cols = bf.flat_butterfly_cols(nb, nb, k)
+    for t in range(1, cols.shape[1]):
+        perm = cols[:, t]
+        assert sorted(perm) == list(range(nb))  # permutation
+        assert all(perm[perm[i]] == i for i in range(nb))  # involution
+
+
+@given(
+    seq=st.sampled_from([256, 512, 1024, 2048]),
+    local=st.integers(1, 3),
+    glob=st.integers(0, 2),
+)
+@settings(max_examples=30, deadline=None)
+def test_causal_pattern_always_covers_self_and_past_anchor(seq, local, glob):
+    """Causal pixelfly attention: every query block attends to its own
+    (diagonal) block, and the schedule never references a future block."""
+    cfg = ap.AttentionPatternConfig(
+        block=128, local_blocks=local, global_blocks=glob
+    )
+    mask = ap.pixelfly_attention_block_mask(seq, seq, cfg, causal=True)
+    n = mask.shape[0]
+    for i in range(n):
+        assert mask[i, i], "diagonal block must be attended"
+        assert not mask[i, i + 1 :].any(), "future blocks must be masked"
+
+
+@given(
+    seq=st.sampled_from([256, 512, 1024]),
+)
+@settings(max_examples=12, deadline=None)
+def test_schedule_roundtrip(seq):
+    cfg = ap.AttentionPatternConfig(block=128)
+    mask = ap.pixelfly_attention_block_mask(seq, seq, cfg, causal=True)
+    sched = ap.block_schedule(mask, 128, 128)
+    # schedule rows are exactly the mask rows
+    for i in range(sched.nqb):
+        want = set(np.nonzero(mask[i])[0].tolist())
+        got = {
+            int(sched.kv_index[i, t])
+            for t in range(sched.max_nkv)
+            if sched.valid[i, t]
+        }
+        assert got == want
+
+
+@given(
+    bi=st.sampled_from([128, 256, 384]),
+    bo=st.sampled_from([128, 256, 512]),
+    density=st.floats(0.1, 0.9),
+    seed=st.integers(0, 3),
+)
+@settings(max_examples=20, deadline=None)
+def test_pixelfly_linear_linearity(bi, bo, density, seed):
+    """The layer is linear: f(ax + by) == a f(x) + b f(y)."""
+    spec = LinearSpec.pixelfly(bi, bo, density, block=64, dtype=jnp.float32)
+    params = init_linear(jax.random.PRNGKey(seed), spec)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, bi)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((3, bi)), jnp.float32)
+    lhs = apply_linear(spec, params, 2.0 * x - 0.5 * y)
+    rhs = 2.0 * apply_linear(spec, params, x) - 0.5 * apply_linear(spec, params, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=2e-3, atol=2e-3)
+
+
+@given(
+    n=st.sampled_from([256, 512]),
+    k=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 5),
+)
+@settings(max_examples=20, deadline=None)
+def test_bsr_equals_dense_of_scattered_weight(n, k, seed):
+    """bsr(x) == x @ dense(W) for the scattered weight, any stride/seed."""
+    rng = np.random.default_rng(seed)
+    pat = bf.make_pattern(n, n, block=64, max_stride=k)
+    blocks = jnp.asarray(
+        rng.standard_normal((pat.nb_out, pat.r, 64, 64)), jnp.float32
+    )
+    cols = jnp.asarray(pat.cols)
+    x = jnp.asarray(rng.standard_normal((4, n)), jnp.float32)
+    w = ref.bsr_to_dense(blocks, cols, n)
+    np.testing.assert_allclose(
+        np.asarray(ref.bsr_matmul_gather(x, blocks, cols)),
+        np.asarray(x @ w),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+@given(data_bytes=st.integers(1, 3))
+@settings(max_examples=3, deadline=None)
+def test_checkpoint_roundtrip_random_trees(data_bytes):
+    import tempfile
+
+    from repro.training import checkpoint as ck
+
+    rng = np.random.default_rng(data_bytes)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((4, data_bytes * 8))),
+        "nested": {"b": jnp.asarray(rng.integers(0, 5, (3,)), jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, tree)
+        out, _ = ck.restore(d, jax.tree.map(jnp.zeros_like, tree))
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

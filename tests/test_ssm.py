@@ -1,0 +1,101 @@
+"""Mamba2 SSD: chunked scan vs naive recurrence oracle; decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_lib
+
+
+def naive_ssd(x, dt, A, B, C):
+    """Sequential oracle: S_t = S_{t-1} exp(dt_t A) + dt_t B_t x_t;
+    y_t = C_t . S_t. Shapes as in _ssd_chunked."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    S = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None])  # (b,h)
+        dBx = np.einsum(
+            "bh,bn,bhp->bhpn", np.asarray(dt[:, t]), np.asarray(B[:, t]),
+            np.asarray(x[:, t]),
+        )
+        S = S * dA[..., None, None] + dBx
+        ys[:, t] = np.einsum("bhpn,bn->bhp", S, np.asarray(C[:, t]))
+    return ys, S
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunked_ssd_matches_naive(chunk):
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 32, 3, 4, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.5 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(h) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    y, final = ssm_lib._ssd_chunked(x / dt[..., None], dt, A, B, C, chunk)
+    # _ssd_chunked multiplies x by dt internally; feed x/dt so the oracle's
+    # dt_t B_t x_t matches.
+    y_ref, S_ref = naive_ssd(
+        np.asarray(x / dt[..., None]), dt, A, B, C
+    )
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), S_ref, rtol=2e-4, atol=2e-4)
+
+
+def _cfg():
+    return ModelConfig(
+        name="t", family="ssm", num_layers=1, d_model=64, num_heads=0,
+        num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=64,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8, dtype="float32",
+    )
+
+
+def test_train_decode_consistency():
+    """Stepping the recurrent decode path over a sequence must reproduce
+    the chunked train forward."""
+    cfg = _cfg()
+    spec = ssm_lib.SsmSpec(cfg)
+    key = jax.random.PRNGKey(0)
+    params = ssm_lib.init_ssm(key, spec)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)) * 0.3, jnp.float32)
+    y_train, cache_final = ssm_lib.apply_ssm_train(
+        spec, params, x, return_state=True
+    )
+    cache = ssm_lib.init_ssm_cache(spec, 2, jnp.float32)
+    ys = []
+    for t in range(16):
+        y_t, cache = ssm_lib.apply_ssm_decode(spec, params, x[:, t : t + 1], cache)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_dec), np.asarray(y_train), rtol=2e-3, atol=2e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(cache["state"]), np.asarray(cache_final["state"]),
+        rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(cache["conv"]), np.asarray(cache_final["conv"]),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_prefill_then_decode_continues():
+    """Prefill state + one decode step == train forward over s+1 tokens."""
+    cfg = _cfg()
+    spec = ssm_lib.SsmSpec(cfg)
+    params = ssm_lib.init_ssm(jax.random.PRNGKey(1), spec)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 17, cfg.d_model)) * 0.3, jnp.float32)
+    y_full, _ = ssm_lib.apply_ssm_train(spec, params, x)
+    _, cache = ssm_lib.apply_ssm_train(spec, params, x[:, :16], return_state=True)
+    y_last, _ = ssm_lib.apply_ssm_decode(spec, params, x[:, 16:17], cache)
+    np.testing.assert_allclose(
+        np.asarray(y_last[:, 0]), np.asarray(y_full[:, 16]),
+        rtol=2e-3, atol=2e-3,
+    )
