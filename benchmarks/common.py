@@ -1,10 +1,32 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+# Set by ``benchmarks.run --json DIR``; suites drop their JSON artifacts
+# (e.g. BENCH_serve.json) here. Defaults to the working directory.
+JSON_DIR: str = "."
+
+
+def set_json_dir(path: str) -> None:
+    global JSON_DIR
+    JSON_DIR = path
+    os.makedirs(path, exist_ok=True)
+
+
+def emit_json(filename: str, payload: dict) -> str:
+    """Write a benchmark artifact under JSON_DIR; returns its path."""
+    path = os.path.join(JSON_DIR, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -1,0 +1,145 @@
+"""Serving benchmark: continuous-batching engine vs the fixed-batch Server.
+
+Two measurements on the same smoke config and shared weights:
+
+1. **uniform** — the exact workload the seed ``Server`` can run (one
+   fixed-size batch, equal prompt/gen lengths) on both paths. The engine
+   wins on prefill alone: one jit'd bucketed pass vs a per-token python
+   loop through the decode step.
+2. **mixed** — what only the engine can do: ragged prompt/gen lengths,
+   twice as many requests as slots, late arrivals submitted mid-flight.
+   Continuous batching shows up in the occupancy stats (slots refill the
+   step after an eviction).
+
+Emits one CSV row per scenario and writes ``BENCH_serve.json`` (under
+``--json DIR`` when invoked via ``benchmarks.run``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import Server
+from repro.serving import Engine, EngineConfig, ServeStats
+
+ARCH = "qwen3-1.7b"
+BATCH = 4
+PROMPT_LEN = 32
+GEN = 16
+
+
+def run() -> None:
+    cfg = registry.get_smoke(ARCH, sparse=True)
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(BATCH, PROMPT_LEN), dtype=np.int32
+    )
+
+    # ---- seed Server baseline (fixed batch, per-token prefill loop)
+    server = Server(cfg, mesh)
+    server.generate(prompts[:, :PROMPT_LEN], 2)  # warm the decode jit
+    t0 = time.perf_counter()
+    out = server.generate(prompts, GEN)
+    server_s = time.perf_counter() - t0
+    server_tokens = int(out.size)
+    server_tok_s = server_tokens / server_s
+
+    # ---- engine, uniform workload (same requests, shared weights)
+    max_len = PROMPT_LEN + GEN + 1
+    engine = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=BATCH, max_len=max_len),
+        params=server.params,
+    )
+    engine.submit(prompts[0], 2)  # warm the prefill/decode jits
+    engine.drain()
+    engine.stats = ServeStats()
+    t0 = time.perf_counter()
+    for b in range(BATCH):
+        engine.submit(prompts[b], GEN)
+    finished = engine.drain()
+    engine_s = time.perf_counter() - t0
+    engine_tokens = sum(len(f.tokens) for f in finished)
+    uniform = engine.stats_summary()
+    uniform["wall_tok_s"] = round(engine_tokens / engine_s, 2)
+
+    # ---- engine, mixed-length trace with mid-flight arrivals
+    engine2 = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=BATCH, max_len=2 * max_len),
+        params=server.params,
+    )
+    engine2.submit(prompts[0], 2)  # warm this instance's jits too
+    engine2.drain()
+    engine2.stats = ServeStats()
+    rng = np.random.default_rng(1)
+    n_req = 2 * BATCH
+    lens = [int(rng.integers(8, 2 * PROMPT_LEN)) for _ in range(n_req)]
+    gens = [int(rng.integers(GEN // 2, 2 * GEN)) for _ in range(n_req)]
+    t0 = time.perf_counter()
+    for i in range(n_req // 2):
+        engine2.submit(
+            rng.integers(0, cfg.vocab_size, lens[i]).astype(np.int32),
+            gens[i],
+        )
+    fins = []
+    for _ in range(GEN // 2):  # let the first wave make progress
+        fins += engine2.step()
+    for i in range(n_req // 2, n_req):  # late arrivals, admitted mid-flight
+        engine2.submit(
+            rng.integers(0, cfg.vocab_size, lens[i]).astype(np.int32),
+            gens[i],
+        )
+    fins += engine2.drain()
+    mixed_s = time.perf_counter() - t0
+    mixed = engine2.stats_summary()
+    mixed["wall_tok_s"] = round(
+        sum(len(f.tokens) for f in fins) / mixed_s, 2
+    )
+    mixed["requests"] = n_req
+
+    payload = {
+        "config": {
+            "arch": ARCH,
+            "smoke": True,
+            "sparse": True,
+            "batch": BATCH,
+            "prompt_len": PROMPT_LEN,
+            "gen": GEN,
+            "page": cfg.attn_block,
+            "slots": BATCH,
+        },
+        "server": {
+            "tok_s": round(server_tok_s, 2),
+            "total_tokens": server_tokens,
+            "wall_s": round(server_s, 4),
+        },
+        "engine_uniform": uniform,
+        "engine_mixed": mixed,
+        "speedup_vs_server": round(uniform["tok_s"] / server_tok_s, 2),
+    }
+    emit_json("BENCH_serve.json", payload)
+    emit(
+        "serve_engine/uniform",
+        1e6 * engine_s / max(engine_tokens, 1),
+        f"tok_s={uniform['tok_s']};server_tok_s={server_tok_s:.2f}"
+        f";speedup={payload['speedup_vs_server']}x",
+    )
+    emit(
+        "serve_engine/mixed",
+        1e6 * mixed_s / max(mixed["generated_tokens"], 1),
+        f"tok_s={mixed['tok_s']};occupancy={mixed['mean_occupancy']}"
+        f";p95_ms={mixed['p95_token_latency_ms']}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,9 @@
-"""Batched serving example: prefill + decode with a KV cache on a smoke
-config (CPU). The production path for the full configs is exercised by the
-multi-pod dry-run (decode_32k / long_500k cells).
+"""Continuous-batching serving example on a smoke config (CPU).
+
+Mixed-length requests flow through ``repro.serving.Engine``: jit'd
+bucketed prefill into the block-paged KV cache, slot-based admission and
+eviction per step, one jit'd decode step over all slots. Two late
+requests are submitted mid-flight to show slots refilling.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -9,18 +12,38 @@ import numpy as np
 
 from repro.configs import registry
 from repro.launch.mesh import make_local_mesh
-from repro.launch.serve import Server
+from repro.serving import Engine, EngineConfig
 
 
 def main():
     cfg = registry.get_smoke("smollm-360m", sparse=True)
-    server = Server(cfg, make_local_mesh())
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, size=(4, 16), dtype=np.int32
+    engine = Engine(
+        cfg,
+        make_local_mesh(),
+        engine_cfg=EngineConfig(max_slots=3, max_len=128),
     )
-    out = server.generate(prompts, gen_len=12)
-    print("generated token grid (4 requests x 12 tokens):")
-    print(out)
+    rng = np.random.default_rng(0)
+    for plen, gen in [(16, 12), (9, 6), (24, 10), (5, 8)]:
+        engine.submit(rng.integers(0, cfg.vocab_size, plen), gen)
+    finished = []
+    for _ in range(6):  # first wave makes progress...
+        finished += engine.step()
+    for plen, gen in [(12, 5), (7, 9)]:  # ...then late arrivals join
+        engine.submit(rng.integers(0, cfg.vocab_size, plen), gen)
+    finished += engine.drain()
+
+    for f in sorted(finished, key=lambda f: f.uid):
+        print(
+            f"req {f.uid}: prompt {f.prompt.size:>2} tok -> "
+            f"{len(f.tokens):>2} generated ({f.finish_reason}, "
+            f"admitted step {f.admit_step}) {f.tokens[:8]}"
+        )
+    s = engine.stats_summary()
+    print(
+        f"\n{s['generated_tokens']} tokens, {s['tok_s']} tok/s, "
+        f"occupancy mean {s['mean_occupancy']} "
+        f"(min {s['min_occupancy']}, max {s['max_occupancy']})"
+    )
 
 
 if __name__ == "__main__":

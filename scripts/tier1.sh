@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the fast test subset (everything not marked `slow`).
+# The full 5-minute suite is `PYTHONPATH=src python -m pytest -q`.
+#
+#   scripts/tier1.sh            # fast subset
+#   scripts/tier1.sh -x         # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q \
+    -m "not slow" --continue-on-collection-errors "$@"

@@ -1,0 +1,13 @@
+"""jax version compatibility for the Pallas TPU kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``;
+resolve whichever this jax provides, once, for both kernels.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

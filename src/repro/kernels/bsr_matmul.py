@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["bsr_matmul_pallas"]
 
 
@@ -104,7 +106,7 @@ def bsr_matmul_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((B, nb_out * b), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
     )(cols, x, blocks)

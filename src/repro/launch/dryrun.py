@@ -183,6 +183,8 @@ def run_cell(
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     cost = roofline.analyze_hlo(hlo)
     terms = roofline.roofline_terms(cost)

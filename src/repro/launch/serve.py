@@ -1,11 +1,17 @@
-"""Serving launcher: prefill + batched decode with a KV/SSM cache.
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
 CPU-scale demo (smoke configs) and the TPU entry point (full configs via
-the production mesh). Requests are batched; decode runs one jit'd
-serve_step per token over the shared cache.
+the production mesh). Requests flow through ``repro.serving.Engine``:
+jit'd bucketed prefill straight into the block-paged KV cache, one jit'd
+decode step per token over all slots, admission/eviction per step.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+``Server`` below is the pre-engine fixed-batch reference path (prefills
+token-by-token through the decode step); it is kept as the numerics
+oracle for tests and as the baseline the serving benchmark measures the
+engine against.
 """
 
 from __future__ import annotations
@@ -21,10 +27,12 @@ from repro.configs import registry
 from repro.distributed import sharding
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import transformer as T
+from repro.serving import Engine, EngineConfig
 
 
 class Server:
-    """Batched LM server: prefill once, then step the decode cache."""
+    """Fixed-batch LM server (reference): prefill once, then step the
+    decode cache. Superseded by ``repro.serving.Engine`` for serving."""
 
     def __init__(self, cfg, mesh, *, strategy: str = "fsdp", seed: int = 0):
         self.cfg, self.mesh = cfg, mesh
@@ -77,11 +85,18 @@ def main():
     ap.add_argument("--arch", choices=registry.ARCH_NAMES, required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sparse", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to submit")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="engine cache slots (default: --batch)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-slot KV capacity (default: fits prompt+gen)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--legacy-server", action="store_true",
+                    help="use the fixed-batch reference Server instead")
     args = ap.parse_args()
 
     cfg = (
@@ -97,17 +112,55 @@ def main():
     mesh = (
         make_production_mesh() if args.production_mesh else make_local_mesh()
     )
-    server = Server(cfg, mesh, strategy=args.strategy)
     rng = np.random.default_rng(0)
     prompts = rng.integers(
         0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32
     )
+
+    # the paged cache covers attention families; SSM/hybrid state is
+    # slot-indexed, not paged — serve those through the reference path
+    has_ssm = any(g.kind == "ssm" for g in cfg.layer_groups())
+    if has_ssm and not args.legacy_server:
+        print(f"{args.arch} has SSM layers: using the fixed-batch Server "
+              "(paged engine covers attention families)")
+    if args.legacy_server or has_ssm:
+        server = Server(cfg, mesh, strategy=args.strategy)
+        t0 = time.perf_counter()
+        out = server.generate(prompts, args.gen)
+        dt = time.perf_counter() - t0
+        print(f"generated {out.shape} tokens in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s)")
+        print(out[:2])
+        return
+
+    max_len = args.max_len or (args.prompt_len + args.gen + 1)
+    engine = Engine(
+        cfg,
+        mesh,
+        strategy=args.strategy,
+        engine_cfg=EngineConfig(
+            max_slots=args.slots or args.batch, max_len=max_len
+        ),
+    )
+    for b in range(args.batch):
+        engine.submit(prompts[b], args.gen)
     t0 = time.perf_counter()
-    out = server.generate(prompts, args.gen)
+    finished = engine.drain()
     dt = time.perf_counter() - t0
-    print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print(out[:2])
+    s = engine.stats_summary()
+    total = sum(len(f.tokens) for f in finished)
+    print(
+        f"served {len(finished)} requests / {total} tokens in {dt:.2f}s "
+        f"({total / dt:.1f} tok/s end-to-end, "
+        f"{s['decode_tok_s']:.1f} tok/s decode, "
+        f"p50 {s['p50_token_latency_ms']:.1f}ms "
+        f"p95 {s['p95_token_latency_ms']:.1f}ms, "
+        f"occupancy {s['mean_occupancy']:.2f})"
+    )
+    grid = np.stack(
+        [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
+    )
+    print(grid)
 
 
 if __name__ == "__main__":

@@ -361,6 +361,89 @@ def sparse_decode_attention_jnp(
     return _grouped_out(p.astype(vg.dtype), vg).astype(q.dtype)
 
 
+def paged_decode_attention_jnp(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    *,
+    sm_scale: float,
+) -> jax.Array:
+    """Decode against a block-paged KV cache (dense over logical pages).
+
+    q (B,1,Hk,G,D); k_pages, v_pages (n_pages, page, Hk, D); page_table
+    (B, P) int32 physical page per logical page; pos (B,) int32 position of
+    the *current* token per slot. Unallocated table entries point at the
+    shared trash page 0 — their keys land beyond ``pos`` and are masked.
+    """
+    b = q.shape[0]
+    _, page, hk, d = k_pages.shape
+    np_ = page_table.shape[1]
+    kg = jnp.take(k_pages, page_table, axis=0).reshape(b, np_ * page, hk, d)
+    vg = jnp.take(v_pages, page_table, axis=0).reshape(b, np_ * page, hk, d)
+    s = _grouped_logits(q, kg) * sm_scale  # (B,Hk,G,1,S)
+    ok = jnp.arange(np_ * page)[None, :] <= pos[:, None]  # logical order
+    s = jnp.where(ok[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return _grouped_out(p.astype(vg.dtype), vg).astype(q.dtype)
+
+
+def paged_sparse_decode_attention_jnp(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    *,
+    sm_scale: float,
+    local_blocks: int,
+    global_blocks: int,
+) -> jax.Array:
+    """Pixelfly-sparse paged decode: each slot's query gathers only the KV
+    *pages* its butterfly/local/global schedule visits — the cache page is
+    the attention block, so the sparse schedule is a page-id computation.
+    O(b·log n) page reads per token instead of O(n). Shapes as in
+    ``paged_decode_attention_jnp`` but with per-slot page gathers.
+    """
+    b = q.shape[0]
+    _, page, hk, d = k_pages.shape
+    np_ = page_table.shape[1]
+    cur = (pos // page).astype(jnp.int32)  # (B,) current logical block
+    n_str = int(math.log2(np_)) if np_ > 1 else 0
+    idx = [jnp.full((b,), i, jnp.int32) for i in range(global_blocks)]
+    for j in range(local_blocks):
+        idx.append(jnp.maximum(cur - j, 0))
+    for t in range(n_str):
+        idx.append(cur ^ (1 << t))
+    idx = jnp.stack(idx, axis=1)  # (B, w) logical block ids
+    idx = jnp.minimum(idx, jnp.maximum(cur, 0)[:, None])  # causal blocks only
+    w = idx.shape[1]
+    phys = jnp.take_along_axis(page_table, idx, axis=1)  # (B, w)
+    kg = jnp.take(k_pages, phys, axis=0).reshape(b, w * page, hk, d)
+    vg = jnp.take(v_pages, phys, axis=0).reshape(b, w * page, hk, d)
+    s = _grouped_logits(q, kg) * sm_scale
+    kpos = (
+        idx[:, :, None] * page + jnp.arange(page)[None, None, :]
+    ).reshape(b, -1)
+    ok = kpos <= pos[:, None]
+    s = jnp.where(ok[:, None, None, None, :], s, -jnp.inf)
+    # XOR collisions duplicate logical blocks; keep first occurrence per row.
+    order = jnp.argsort(idx, axis=1, stable=True)
+    sorted_idx = jnp.take_along_axis(idx, order, axis=1)
+    newgrp = jnp.concatenate(
+        [jnp.ones((b, 1), bool), jnp.diff(sorted_idx, axis=1) != 0], axis=1
+    )
+    first = jnp.zeros((b, w), bool).at[jnp.arange(b)[:, None], order].set(
+        newgrp
+    )
+    ok2 = jnp.repeat(first, page, axis=1)
+    s = jnp.where(ok2[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return _grouped_out(p.astype(vg.dtype), vg).astype(q.dtype)
+
+
 # ----------------------------------------------------------------------
 # Attention module
 # ----------------------------------------------------------------------
@@ -440,12 +523,18 @@ def apply_attention(
     x: jax.Array,
     positions: jax.Array,
     *,
-    mode: str = "train",  # train | prefill | decode | decode_sparse
+    mode: str = "train",  # train | prefill | decode[_sparse] | decode_paged[_sparse]
     cache: dict | None = None,
     pos: jax.Array | None = None,
+    page_table: jax.Array | None = None,
     impl: str | None = None,
 ):
-    """Returns (y, new_cache). x: (B, S, D) [S=1 for decode]."""
+    """Returns (y, new_cache). x: (B, S, D) [S=1 for decode].
+
+    Paged modes: ``cache`` holds slot-shared page pools ``k``/``v`` of shape
+    (n_pages, page, Hk, D), ``pos`` is per-slot (B,), and ``page_table``
+    (B, P) maps each slot's logical pages to physical ones.
+    """
     c = spec.cfg
     b, s, _ = x.shape
     hk, g, d = c.num_kv_heads, c.num_heads // c.num_kv_heads, c.head_dim
@@ -471,7 +560,33 @@ def apply_attention(
             v = constrain(c, v, *aspec["kv"])
 
     new_cache = cache
-    if mode in ("decode", "decode_sparse"):
+    if mode in ("decode_paged", "decode_paged_sparse"):
+        assert cache is not None and pos is not None and page_table is not None
+        page = cache["k"].shape[1]
+        # write-at-position: each slot's token lands in its own page; idle
+        # slots all route to the shared trash page 0 (never read back).
+        phys = jnp.take_along_axis(page_table, (pos // page)[:, None], axis=1)
+        phys = phys[:, 0]
+        off = pos % page
+        kc = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": kc, "v": vc}
+        if mode == "decode_paged_sparse" and page == c.attn_block:
+            o = paged_sparse_decode_attention_jnp(
+                qg,
+                kc,
+                vc,
+                page_table,
+                pos,
+                sm_scale=scale,
+                local_blocks=c.attn_local_blocks,
+                global_blocks=c.attn_global_blocks,
+            )
+        else:
+            o = paged_decode_attention_jnp(
+                qg, kc, vc, page_table, pos, sm_scale=scale
+            )
+    elif mode in ("decode", "decode_sparse"):
         assert cache is not None and pos is not None
         kc = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)

@@ -7,10 +7,17 @@ is a run of structurally identical blocks scanned with ``jax.lax.scan`` (+
 (zamba2's shared attention block) reuse one parameter subtree at several
 positions but keep per-position caches.
 
-Three entry points:
+Entry points:
   forward_train(cfg, params, batch)            -> (loss, metrics)
   prefill(cfg, params, batch, max_len)         -> (logits, cache)
   decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+
+Serving (block-paged KV cache, ``repro.serving``):
+  init_paged_cache(cfg, n_pages, page)         -> paged cache pools
+  prefill_paged(cfg, params, tokens, plen, caches, page_row)
+                                               -> (last-real-token logits, caches)
+  decode_step_paged(cfg, params, caches, tokens, positions, page_table)
+                                               -> (logits, caches)  [ragged positions]
 """
 
 from __future__ import annotations
@@ -29,9 +36,12 @@ from repro.models import ssm as ssm_lib
 __all__ = [
     "init_model",
     "init_cache",
+    "init_paged_cache",
     "forward_train",
     "prefill",
+    "prefill_paged",
     "decode_step",
+    "decode_step_paged",
     "param_count",
 ]
 
@@ -94,6 +104,7 @@ def _apply_block(
     cache: dict | None,
     pos: jax.Array | None,
     impl: str | None,
+    page_table: jax.Array | None = None,
 ):
     """Returns (x, new_cache, lb_loss). ``cache`` may be a zero-size
     placeholder array (cache-less scan); it is normalized to None here and a
@@ -128,6 +139,8 @@ def _apply_block(
     attn_mode = mode
     if mode == "decode" and cfg.sparse_attention:
         attn_mode = "decode_sparse"
+    if mode == "decode_paged" and cfg.sparse_attention:
+        attn_mode = "decode_paged_sparse"
     y, cache = L.apply_attention(
         specs["attn"],
         params["attn"],
@@ -136,6 +149,7 @@ def _apply_block(
         mode=attn_mode,
         cache=cache,
         pos=pos,
+        page_table=page_table,
         impl=impl,
     )
     x = x + y
@@ -216,6 +230,35 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
     return caches
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page: int) -> list:
+    """Slot-shared page pools, one per layer group (stacked over layers).
+
+    Physical page 0 is reserved as the trash page (idle slots and
+    unallocated page-table entries point at it); the serving allocator
+    hands out pages 1..n_pages-1.
+    """
+    caches = []
+    for g in cfg.layer_groups():
+        if g.kind == "ssm":
+            raise NotImplementedError(
+                "paged serving caches cover attention families; SSM state "
+                "is slot-indexed, not paged"
+            )
+        caches.append(
+            {
+                "k": jnp.zeros(
+                    (g.count, n_pages, page, cfg.num_kv_heads, cfg.head_dim),
+                    cfg.jdtype,
+                ),
+                "v": jnp.zeros(
+                    (g.count, n_pages, page, cfg.num_kv_heads, cfg.head_dim),
+                    cfg.jdtype,
+                ),
+            }
+        )
+    return caches
+
+
 # ----------------------------------------------------------------------
 # Group execution (scan over layers)
 # ----------------------------------------------------------------------
@@ -232,6 +275,7 @@ def _run_group(
     cache,
     pos,
     impl,
+    page_table=None,
 ):
     """Scan ``g.count`` blocks. Returns (x, new_cache, lb_sum)."""
 
@@ -241,6 +285,7 @@ def _run_group(
         xc, c_out, lb = _apply_block(
             cfg, g.kind, p, xc, positions,
             mode=mode, cache=c_in, pos=pos, impl=impl,
+            page_table=page_table,
         )
         return (xc, lb_sum + lb), c_out
 
@@ -322,6 +367,7 @@ def _backbone(
     caches=None,
     pos=None,
     impl=None,
+    page_table=None,
 ):
     groups = cfg.layer_groups()
     lb_total = jnp.zeros((), jnp.float32)
@@ -331,6 +377,7 @@ def _backbone(
         x, c_out, lb = _run_group(
             cfg, g, params["groups"][g.param_key], x, positions,
             mode=mode, cache=c_in, pos=pos, impl=impl,
+            page_table=page_table,
         )
         new_caches.append(c_out)
         lb_total = lb_total + lb
@@ -380,6 +427,45 @@ def prefill(
     return logits, caches
 
 
+def prefill_paged(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    plen: jax.Array,
+    caches: list,
+    page_row: jax.Array,
+    *,
+    impl: str | None = None,
+):
+    """Chunked (bucketed) prefill into a block-paged KV cache.
+
+    One jit'd full-sequence pass — no per-token loop: ``tokens`` (1, S) is
+    the prompt right-padded to a page-multiple bucket ``S``; the causal
+    block-sparse schedule runs inside (``apply_attention`` prefill mode).
+    ``plen`` () int32 is the real prompt length; ``page_row`` (S//page,)
+    the slot's physical pages. Keys written for padded positions land
+    beyond ``plen`` in logical order and are masked by every decode read.
+
+    Returns (logits at the last real token (V,), updated paged caches).
+    """
+    x = _inputs_to_x(cfg, params, {"tokens": tokens})
+    b, s, _ = x.shape
+    positions = _positions(cfg, {}, b, s)
+    x, kv, _ = _backbone(cfg, params, x, positions, mode="prefill", impl=impl)
+    xe = jnp.take(x, plen - 1, axis=1)  # (1, d) last *real* prompt token
+    logits = L.lm_logits(cfg, params["head"], params["embed"], xe)
+
+    new_caches = []
+    for pool, fresh in zip(caches, kv):
+        def scat(buf, kvs):
+            count, _, page, hk, d = buf.shape
+            fb = kvs[:, 0].reshape(count, s // page, page, hk, d)
+            return buf.at[:, page_row].set(fb.astype(buf.dtype))
+
+        new_caches.append(jax.tree.map(scat, pool, fresh))
+    return logits[0], new_caches
+
+
 def decode_step(
     cfg: ModelConfig,
     params: dict,
@@ -401,6 +487,38 @@ def decode_step(
     x, new_caches, _ = _backbone(
         cfg, params, x, positions, mode="decode", caches=caches, pos=pos,
         impl=impl,
+    )
+    logits = L.lm_logits(cfg, params["head"], params["embed"], x[:, 0])
+    return logits, new_caches
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: dict,
+    caches: list,
+    tokens: jax.Array,
+    positions: jax.Array,
+    page_table: jax.Array,
+    *,
+    impl: str | None = None,
+):
+    """Slot-indexed decode step over a block-paged KV cache.
+
+    tokens (B,) int32 one token per slot; positions (B,) int32 *ragged*
+    per-slot write positions; page_table (B, P) int32 logical -> physical
+    page map. Idle slots pass position 0 with an all-trash page row.
+    Returns (logits (B, V), new caches).
+    """
+    x = L.embed_tokens(cfg, params["embed"], tokens[:, None])
+    b = x.shape[0]
+    pos2 = positions[:, None]
+    if cfg.mrope_sections:
+        pos2 = jnp.broadcast_to(
+            pos2[..., None], (b, 1, len(cfg.mrope_sections))
+        )
+    x, new_caches, _ = _backbone(
+        cfg, params, x, pos2, mode="decode_paged", caches=caches,
+        pos=positions, page_table=page_table, impl=impl,
     )
     logits = L.lm_logits(cfg, params["head"], params["embed"], x[:, 0])
     return logits, new_caches

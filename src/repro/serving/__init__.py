@@ -1,0 +1,30 @@
+"""Continuous-batching serving engine with a block-paged KV cache.
+
+The cache page size equals the attention block size
+(``ModelConfig.attn_block``), so the pixelfly block-sparse decode
+schedule maps one-to-one onto cache pages: each token reads only the
+pages its local/butterfly/global schedule visits.
+
+  from repro.serving import Engine, EngineConfig
+  eng = Engine(cfg, mesh, engine_cfg=EngineConfig(max_slots=8, max_len=512))
+  eng.submit(prompt_tokens, max_new_tokens=32)
+  finished = eng.drain()
+  print(eng.stats_summary())
+"""
+
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import FinishedRequest, Request, SequenceState
+from repro.serving.scheduler import Scheduler
+from repro.serving.stats import ServeStats
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "PagedKVCache",
+    "Request",
+    "SequenceState",
+    "FinishedRequest",
+    "Scheduler",
+    "ServeStats",
+]

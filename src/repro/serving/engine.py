@@ -1,0 +1,245 @@
+"""Continuous-batching serving engine over the block-paged KV cache.
+
+``Engine.submit()`` enqueues requests; each ``step()`` admits whatever
+fits (bucketed jit'd prefill straight into the paged cache — no per-token
+prefill loop), runs ONE jit'd decode step over all slots (ragged per-slot
+positions, idle slots masked to the trash page), and evicts finished
+sequences so their slot and pages are reusable the very next step.
+``drain()`` loops until the queue and slots are empty.
+
+The decode step is always shaped ``(max_slots,)`` and prefill shapes are
+bucketed to power-of-two page counts, so the engine compiles a handful of
+programs total no matter how ragged the traffic is.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models import transformer as T
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import FinishedRequest, Request, SequenceState
+from repro.serving.scheduler import Scheduler
+from repro.serving.stats import ServeStats
+
+__all__ = ["Engine", "EngineConfig"]
+
+
+class EngineConfig:
+    """Serving knobs: ``max_slots`` concurrent sequences, each with
+    ``max_len`` tokens of page-granular KV capacity."""
+
+    def __init__(self, max_slots: int = 8, max_len: int = 512):
+        self.max_slots = max_slots
+        self.max_len = max_len
+
+    def rounded(self, page: int) -> "EngineConfig":
+        max_len = -(-self.max_len // page) * page
+        return EngineConfig(self.max_slots, max_len)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh,
+        *,
+        engine_cfg: EngineConfig | None = None,
+        strategy: str = "fsdp",
+        seed: int = 0,
+        params=None,
+    ):
+        self.mesh = mesh
+        st = sharding.Strategy(mesh, strategy)
+        self.cfg = cfg = cfg.replace(tp_size=st.tp_size, batch_axes=st.batch)
+        self.st = st
+        ecfg = (engine_cfg or EngineConfig()).rounded(cfg.attn_block)
+        self.ecfg = ecfg
+        with mesh:
+            if params is None:
+                key = jax.random.PRNGKey(seed)
+                pshape = jax.eval_shape(lambda k: T.init_model(k, cfg), key)
+                psh = sharding.param_shardings(st, pshape)
+                params = jax.jit(
+                    lambda k: T.init_model(k, cfg), out_shardings=psh
+                )(key)
+            self.params = params
+            self.kv = PagedKVCache(cfg, ecfg.max_slots, ecfg.max_len)
+            self._decode = jax.jit(
+                lambda p, c, t, pos, pt: T.decode_step_paged(
+                    cfg, p, c, t, pos, pt
+                ),
+                donate_argnums=(1,),
+            )
+            # one wrapper; jax.jit specializes per (1, S) bucket shape
+            self._prefill = jax.jit(
+                lambda p, t, plen, c, row: T.prefill_paged(
+                    cfg, p, t, plen, c, row
+                ),
+                donate_argnums=(3,),
+            )
+        self.scheduler = Scheduler(ecfg.max_slots)
+        self.stats = ServeStats()
+        self._uid = 0
+        self._step_idx = 0
+
+    # ---- request intake ----------------------------------------------
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        *,
+        eos_id: int | None = None,
+    ) -> int:
+        """Enqueue one request; returns its uid."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens exceeds max_len "
+                f"{self.ecfg.max_len}"
+            )
+        self._uid += 1
+        self.scheduler.submit(
+            Request(self._uid, prompt, max_new_tokens, eos_id=eos_id)
+        )
+        return self._uid
+
+    # ---- prefill -----------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        """Pad prompt lengths to power-of-two page counts: a handful of
+        compiled prefill programs serve every prompt length."""
+        nb = min(
+            _next_pow2(self.kv.pages_for_len(plen)), self.kv.pages_per_seq
+        )
+        return nb * self.kv.page
+
+    def _admit_one(self) -> SequenceState | None:
+        req = self.scheduler.peek_waiting()
+        if req is None or self.scheduler.free_slot() is None:
+            return None
+        s = self._bucket(req.prompt.size)
+        if self.kv.pages_for_len(s) > self.kv.free_pages:
+            return None  # admit once pages free up
+        state = self.scheduler.admit(self._step_idx)
+        assert state is not None
+        plen = state.plen
+        self.kv.alloc_upto(state.slot, s - 1)
+        row = jnp.asarray(self.kv.table_row(state.slot, s // self.kv.page))
+        tokens = np.zeros((1, s), np.int32)
+        tokens[0, :plen] = state.request.prompt
+        t0 = time.perf_counter()
+        with self.mesh:
+            logits, self.kv.buffers = self._prefill(
+                self.params,
+                jnp.asarray(tokens),
+                jnp.asarray(plen, jnp.int32),
+                self.kv.buffers,
+                row,
+            )
+            tok = int(jax.block_until_ready(jnp.argmax(logits)))
+        self.stats.record_prefill(plen, time.perf_counter() - t0, emitted=1)
+        state.generated.append(tok)
+        state.pos = plen
+        return state
+
+    # ---- stepping ----------------------------------------------------
+    def step(self) -> list[FinishedRequest]:
+        """One scheduler iteration: admit -> decode -> evict."""
+        finished: list[FinishedRequest] = []
+        while True:
+            state = self._admit_one()
+            if state is None:
+                break
+            if state.done:  # max_new_tokens == 1 or instant EOS
+                finished.append(self._finish(state))
+
+        # a prompt that already fills its slot cannot take a decode step
+        for st_ in list(self.scheduler.active()):
+            if st_.pos >= self.ecfg.max_len:
+                finished.append(self._finish(st_, reason="capacity"))
+
+        active = self.scheduler.active()
+        if active:
+            tokens = np.zeros((self.ecfg.max_slots,), np.int32)
+            positions = np.zeros((self.ecfg.max_slots,), np.int32)
+            for st_ in active:
+                self.kv.alloc_upto(st_.slot, st_.pos)
+                tokens[st_.slot] = st_.generated[-1]
+                positions[st_.slot] = st_.pos
+            t0 = time.perf_counter()
+            with self.mesh:
+                logits, self.kv.buffers = self._decode(
+                    self.params,
+                    self.kv.buffers,
+                    jnp.asarray(tokens),
+                    jnp.asarray(positions),
+                    jnp.asarray(self.kv.page_table),
+                )
+                nxt = np.asarray(
+                    jax.block_until_ready(jnp.argmax(logits, axis=-1))
+                )
+            dt = time.perf_counter() - t0
+            self.stats.record_decode_step(
+                len(active), self.ecfg.max_slots, dt
+            )
+            for st_ in active:
+                st_.pos += 1
+                st_.generated.append(int(nxt[st_.slot]))
+                if st_.done:
+                    finished.append(self._finish(st_))
+                elif st_.pos >= self.ecfg.max_len:
+                    finished.append(self._finish(st_, reason="capacity"))
+        self._step_idx += 1
+        return finished
+
+    def _finish(
+        self, state: SequenceState, *, reason: str | None = None
+    ) -> FinishedRequest:
+        self.scheduler.evict(state.slot)
+        self.kv.free_slot(state.slot)
+        self.stats.record_finish()
+        if reason is None:
+            eos = state.request.eos_id
+            reason = (
+                "eos"
+                if eos is not None and state.generated[-1] == eos
+                else "length"
+            )
+        return FinishedRequest(
+            uid=state.request.uid,
+            prompt=state.request.prompt,
+            tokens=np.asarray(state.generated, np.int32),
+            finish_reason=reason,
+            admit_step=state.admit_step,
+            finish_step=self._step_idx,
+        )
+
+    def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:
+        """Step until every submitted request has finished."""
+        out: list[FinishedRequest] = []
+        steps = 0
+        while not self.scheduler.idle:
+            out.extend(self.step())
+            steps += 1
+            if (
+                max_steps is not None
+                and steps >= max_steps
+                and not self.scheduler.idle
+            ):
+                raise RuntimeError(
+                    f"drain did not converge in {max_steps} steps"
+                )
+        return out
+
+    def stats_summary(self) -> dict:
+        return self.stats.summary()

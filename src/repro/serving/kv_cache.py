@@ -1,0 +1,85 @@
+"""Block-paged KV cache: page size == the attention block size.
+
+The pixelfly attention pattern is block-structured (local + butterfly
+strides + global cross, ``repro.core.attn_pattern``), so sizing cache
+pages in units of ``cfg.attn_block`` makes the sparse decode schedule a
+*page-id* computation: each token gathers only the O(b·log n) pages its
+schedule visits, never the whole cache.
+
+Device state lives in ``buffers`` (one pool per layer group, built by
+``transformer.init_paged_cache``); the page table and free list are tiny
+host-side numpy/python structures updated between jit'd steps. Physical
+page 0 is the shared trash page: idle slots and unallocated table entries
+point at it, and every read masks it out via logical positions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+__all__ = ["PagedKVCache"]
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int):
+        page = cfg.attn_block
+        if max_len % page:
+            raise ValueError(
+                f"max_len {max_len} must be a multiple of the page size "
+                f"(attn_block={page})"
+            )
+        self.cfg = cfg
+        self.page = page
+        self.max_slots = max_slots
+        self.pages_per_seq = max_len // page
+        self.max_len = max_len
+        # worst case every slot is full, +1 for the trash page
+        self.n_pages = max_slots * self.pages_per_seq + 1
+        self.buffers = T.init_paged_cache(cfg, self.n_pages, page)
+        self.page_table = np.zeros(
+            (max_slots, self.pages_per_seq), np.int32
+        )
+        self._free: list[int] = list(range(self.n_pages - 1, 0, -1))
+        self._owned: dict[int, list[int]] = {}
+
+    # ---- allocation --------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for_len(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page)
+
+    def alloc_upto(self, slot: int, pos: int) -> None:
+        """Ensure logical pages [0, pos // page] of ``slot`` are backed."""
+        need = pos // self.page + 1
+        if need > self.pages_per_seq:
+            raise ValueError(
+                f"position {pos} exceeds slot capacity {self.max_len}"
+            )
+        owned = self._owned.setdefault(slot, [])
+        while len(owned) < need:
+            if not self._free:
+                raise RuntimeError("KV cache out of pages")
+            p = self._free.pop()
+            self.page_table[slot, len(owned)] = p
+            owned.append(p)
+
+    def free_slot(self, slot: int) -> None:
+        for p in self._owned.pop(slot, []):
+            self._free.append(p)
+        self.page_table[slot, :] = 0
+
+    # ---- views -------------------------------------------------------
+    def table_row(self, slot: int, n_pages: int) -> np.ndarray:
+        return self.page_table[slot, :n_pages].copy()
+
+    def memory_bytes(self) -> int:
+        return sum(
+            int(np.prod(b.shape)) * b.dtype.itemsize
+            for pool in self.buffers
+            for b in pool.values()
+        )

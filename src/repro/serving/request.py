@@ -1,0 +1,63 @@
+"""Request / sequence lifecycle types for the serving engine.
+
+A ``Request`` is what a client submits; a ``SequenceState`` is a request
+bound to a cache slot while it is in flight; a ``FinishedRequest`` is the
+terminal record handed back by ``Engine.step``/``drain``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Request", "SequenceState", "FinishedRequest"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (plen,) int32, plen >= 1
+    max_new_tokens: int
+    eos_id: int | None = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("prompt must have at least one token")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class SequenceState:
+    """An admitted request occupying one cache slot."""
+
+    request: Request
+    slot: int
+    pos: int = 0  # write position of the *next* decode token
+    generated: list[int] = dataclasses.field(default_factory=list)
+    admit_step: int = 0
+
+    @property
+    def plen(self) -> int:
+        return int(self.request.prompt.size)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        return eos is not None and bool(self.generated) and (
+            self.generated[-1] == eos
+        )
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    uid: int
+    prompt: np.ndarray
+    tokens: np.ndarray  # (n_generated,) int32
+    finish_reason: str  # "length" | "eos" | "capacity"
+    admit_step: int
+    finish_step: int

@@ -1,0 +1,71 @@
+"""Slot-based continuous-batching scheduler.
+
+FCFS admission into a fixed set of cache slots: sequences are admitted the
+moment a slot (and its KV pages) frees up and evicted the step they
+finish — no full-batch barrier, no recompilation (the decode step is
+always shaped (max_slots,), idle slots ride along masked).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+from repro.serving.request import Request, SequenceState
+
+__all__ = ["Scheduler"]
+
+
+class Scheduler:
+    def __init__(self, max_slots: int):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self.waiting: deque[Request] = deque()
+        self.slots: list[SequenceState | None] = [None] * max_slots
+
+    # ---- queue -------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def peek_waiting(self) -> Request | None:
+        return self.waiting[0] if self.waiting else None
+
+    # ---- slots -------------------------------------------------------
+    def free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, step: int) -> SequenceState | None:
+        """Bind the head-of-queue request to a free slot (None if neither)."""
+        slot = self.free_slot()
+        if slot is None or not self.waiting:
+            return None
+        req = self.waiting.popleft()
+        state = SequenceState(request=req, slot=slot, admit_step=step)
+        self.slots[slot] = state
+        return state
+
+    def evict(self, slot: int) -> SequenceState:
+        state = self.slots[slot]
+        if state is None:
+            raise ValueError(f"slot {slot} is empty")
+        self.slots[slot] = None
+        return state
+
+    # ---- views -------------------------------------------------------
+    def active(self) -> list[SequenceState]:
+        return [s for s in self.slots if s is not None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def occupancy(self) -> float:
+        return self.num_active / self.max_slots
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and self.num_active == 0

@@ -1,0 +1,101 @@
+"""Latency / throughput / occupancy tracking for the serving engine.
+
+Everything is recorded host-side per engine step; ``summary()`` folds the
+raw samples into the numbers the benchmark emits (tok/s, p50/p95 per-token
+latency, batch occupancy).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ServeStats"]
+
+
+class ServeStats:
+    def __init__(self):
+        self.prefill_tokens = 0
+        self.prefill_time = 0.0
+        self.prefills = 0
+        self.decode_time = 0.0
+        self.decode_steps = 0
+        self.generated = 0
+        self._step_latency: list[float] = []   # s per decode step
+        self._step_active: list[int] = []      # active slots per step
+        self._occupancy: list[float] = []
+        self.finished = 0
+
+    # ---- recording ---------------------------------------------------
+    def record_prefill(
+        self, n_tokens: int, dt: float, emitted: int = 0
+    ) -> None:
+        """``emitted``: tokens *generated* by this prefill (the argmax of
+        the last-prompt-token logits is the request's first output)."""
+        self.prefills += 1
+        self.prefill_tokens += n_tokens
+        self.prefill_time += dt
+        self.generated += emitted
+
+    def record_decode_step(
+        self, n_active: int, max_slots: int, dt: float
+    ) -> None:
+        """A decode step emits one token per active slot."""
+        self.decode_steps += 1
+        self.decode_time += dt
+        self.generated += n_active
+        self._step_latency.append(dt)
+        self._step_active.append(n_active)
+        self._occupancy.append(n_active / max_slots)
+
+    def record_finish(self, n: int = 1) -> None:
+        self.finished += n
+
+    # ---- folding -----------------------------------------------------
+    def summary(self) -> dict:
+        lat = np.asarray(self._step_latency, np.float64)
+        total_time = self.prefill_time + self.decode_time
+        # per-token latency: the wall time a decode step spent per emitted
+        # token (steps emit one token per active slot)
+        return {
+            "requests_finished": self.finished,
+            "generated_tokens": self.generated,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_s": round(self.prefill_time, 6),
+            "decode_s": round(self.decode_time, 6),
+            "total_s": round(total_time, 6),
+            "decode_steps": self.decode_steps,
+            "tok_s": round(self.generated / total_time, 2)
+            if total_time > 0
+            else 0.0,
+            # decode throughput counts only decode-step tokens (generated
+            # also includes each request's prefill-emitted first token)
+            "decode_tok_s": round(
+                sum(self._step_active) / self.decode_time, 2
+            )
+            if self.decode_time > 0
+            else 0.0,
+            "prefill_tok_s": round(
+                self.prefill_tokens / self.prefill_time, 2
+            )
+            if self.prefill_time > 0
+            else 0.0,
+            "p50_token_latency_ms": round(
+                float(np.percentile(lat, 50)) * 1e3, 3
+            )
+            if lat.size
+            else 0.0,
+            "p95_token_latency_ms": round(
+                float(np.percentile(lat, 95)) * 1e3, 3
+            )
+            if lat.size
+            else 0.0,
+            "mean_occupancy": round(float(np.mean(self._occupancy)), 4)
+            if self._occupancy
+            else 0.0,
+            "min_occupancy": round(float(np.min(self._occupancy)), 4)
+            if self._occupancy
+            else 0.0,
+            "max_occupancy": round(float(np.max(self._occupancy)), 4)
+            if self._occupancy
+            else 0.0,
+        }

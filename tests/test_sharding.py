@@ -64,7 +64,10 @@ def test_batch_specs_divisibility_fallback():
 
 def test_cache_specs_seq_sharding_for_batch1():
     import jax.numpy as jnp
-    amesh = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    try:  # jax >= 0.5 signature
+        amesh = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    except TypeError:  # jax 0.4.x: tuple of (name, size) pairs
+        amesh = jax.sharding.AbstractMesh((("data", 2), ("model", 1)))
     st = sharding.Strategy(amesh, "fsdp")
     caches = [
         {"k": jax.ShapeDtypeStruct((4, 1, 1024, 5, 64), jnp.bfloat16)}

@@ -15,6 +15,9 @@ from repro.training.loop import TrainConfig, Trainer, make_train_step
 from repro.training.optimizer import OptConfig, init_opt_state, lr_at
 import jax.numpy as jnp
 
+# every test here runs a real (small) training loop: 12-20 s apiece
+pytestmark = pytest.mark.slow
+
 
 def _trainer(tmp_path, steps=30, compress=False, seed=0, sparse=True):
     cfg = registry.get_smoke("smollm-360m", sparse=sparse).replace(

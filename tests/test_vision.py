@@ -43,6 +43,7 @@ def test_sparse_has_fewer_params():
     assert n(ps) < n(pd)
 
 
+@pytest.mark.slow
 def test_vit_trains():
     cfg = _cfg("vit", True)
     params = V.init_vit(jax.random.PRNGKey(0), cfg)
