@@ -33,6 +33,23 @@ PROMPT_LEN = 32
 GEN = 16
 
 
+def _measure_uniform(engine: Engine, prompts: np.ndarray, gen: int) -> dict:
+    """Warm the jits, reset stats, serve one uniform wave, summarize."""
+    engine.submit(prompts[0], 2)
+    engine.drain()
+    engine.stats = ServeStats()
+    t0 = time.perf_counter()
+    for b in range(prompts.shape[0]):
+        engine.submit(prompts[b], gen)
+    finished = engine.drain()
+    wall_s = time.perf_counter() - t0
+    out = engine.stats_summary()
+    tokens = sum(len(f.tokens) for f in finished)
+    out["wall_tok_s"] = round(tokens / wall_s, 2)
+    out["wall_s"] = round(wall_s, 4)
+    return out
+
+
 def run() -> None:
     cfg = registry.get_smoke(ARCH, sparse=True)
     mesh = make_local_mesh()
@@ -58,17 +75,24 @@ def run() -> None:
         engine_cfg=EngineConfig(max_slots=BATCH, max_len=max_len),
         params=server.params,
     )
-    engine.submit(prompts[0], 2)  # warm the prefill/decode jits
-    engine.drain()
-    engine.stats = ServeStats()
-    t0 = time.perf_counter()
-    for b in range(BATCH):
-        engine.submit(prompts[b], GEN)
-    finished = engine.drain()
-    engine_s = time.perf_counter() - t0
-    engine_tokens = sum(len(f.tokens) for f in finished)
-    uniform = engine.stats_summary()
-    uniform["wall_tok_s"] = round(engine_tokens / engine_s, 2)
+    uniform = _measure_uniform(engine, prompts, GEN)
+
+    # ---- per-impl decode comparison: jnp gather path vs the Pallas
+    # paged kernel (off TPU the interpreted kernel stands in for it, so
+    # the json tracks parity-path numbers on every platform)
+    base_impl = engine.paged_impl
+    other_impl = "interpret" if base_impl == "gather" else "gather"
+    keys = ("decode_tok_s", "p95_token_latency_ms", "p50_token_latency_ms")
+    by_impl = {base_impl: {k: uniform[k] for k in keys}}
+    engine_o = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=BATCH, max_len=max_len),
+        params=server.params,
+        paged_impl=other_impl,
+    )
+    other = _measure_uniform(engine_o, prompts, GEN)
+    by_impl[other_impl] = {k: other[k] for k in keys}
 
     # ---- engine, mixed-length trace with mid-flight arrivals
     engine2 = Engine(
@@ -124,12 +148,14 @@ def run() -> None:
         },
         "engine_uniform": uniform,
         "engine_mixed": mixed,
+        "decode_by_impl": by_impl,
+        "paged_impl_default": base_impl,
         "speedup_vs_server": round(uniform["tok_s"] / server_tok_s, 2),
     }
     emit_json("BENCH_serve.json", payload)
     emit(
         "serve_engine/uniform",
-        1e6 * engine_s / max(engine_tokens, 1),
+        1e6 / max(uniform["wall_tok_s"], 1e-9),
         f"tok_s={uniform['tok_s']};server_tok_s={server_tok_s:.2f}"
         f";speedup={payload['speedup_vs_server']}x",
     )
@@ -139,6 +165,13 @@ def run() -> None:
         f"tok_s={mixed['tok_s']};occupancy={mixed['mean_occupancy']}"
         f";p95_ms={mixed['p95_token_latency_ms']}",
     )
+    for impl, row in by_impl.items():
+        emit(
+            f"serve_engine/decode_{impl}",
+            1e6 / max(row["decode_tok_s"], 1e-9),
+            f"decode_tok_s={row['decode_tok_s']}"
+            f";p95_ms={row['p95_token_latency_ms']}",
+        )
 
 
 if __name__ == "__main__":

@@ -1,10 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the fast test subset (everything not marked `slow`).
-# The full 5-minute suite is `PYTHONPATH=src python -m pytest -q`.
+# Tier-1 gate: the fast test subset (everything not marked `slow`),
+# including the interpret-mode paged-kernel parity suite
+# (tests/test_kernels_paged.py) so the Pallas/jnp differential gates
+# every PR. The full 5-minute suite is `PYTHONPATH=src python -m pytest -q`.
 #
 #   scripts/tier1.sh            # fast subset
 #   scripts/tier1.sh -x         # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q \
-    -m "not slow" --continue-on-collection-errors "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# Preflight: collection must be clean. Without this a syntax/import error
+# in one test file would silently drop that whole file from the gate.
+# (exit 5 = "no tests collected" — clean collection, let pytest report it)
+rc=0
+python -m pytest -q --co -m "not slow" "$@" > /dev/null 2>&1 || rc=$?
+if [ "$rc" -ne 0 ] && [ "$rc" -ne 5 ]; then
+    echo "tier1: test collection failed" >&2
+    python -m pytest -q --co -m "not slow" "$@" || exit 1
+fi
+exec python -m pytest -q -m "not slow" "$@"

@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: paged block-sparse decode attention.
+
+One decode step for every serving slot against the block-paged KV cache
+(``repro.serving.PagedKVCache``): instead of materializing the scheduled
+pages with ``jnp.take`` gathers (the portable path in
+``repro.models.layers``), the kernel reads the K/V *pools* directly.
+The page-id schedule — the pixelfly butterfly/local/global block ids
+each slot's query visits, already mapped through the slot's page table
+to physical page ids — is scalar-prefetched, so the BlockSpec index maps
+can steer each grid step's DMA at the right pool page before the kernel
+body runs. This is the step ROADMAP calls "as fast as the hardware
+allows": page-table indirection and the O(b·log n) sparse schedule fused
+into one pass over VMEM-resident accumulators.
+
+Layout and masking:
+  - grid ``(B, Hk, w)`` — slots x kv-heads x schedule slots; the
+    schedule axis is sequential so the online-softmax statistics
+    (m, l) and the output accumulator stay resident in VMEM.
+  - q is pre-grouped ``(B, Hk, G, D)`` (GQA: G query heads share one
+    kv head); each grid step contracts the (G, D) query block with one
+    (page, D) pool page.
+  - ``logical`` carries the *logical* block id of every schedule slot:
+    key position ``logical * page + offset`` is masked against the
+    slot's current position, which also neutralizes the shared trash
+    page (physical page 0) — idle/unallocated table entries alias it,
+    and their logical positions land beyond ``pos``.
+  - ``keep`` disables duplicate schedule slots (butterfly XOR
+    collisions) so no key is double-counted, mirroring the
+    first-occurrence mask of the jnp reference path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+__all__ = ["paged_decode_attention_pallas"]
+
+_NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _kernel(
+    phys_ref,
+    logical_ref,
+    keep_ref,
+    pos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    w: int,
+    page: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(keep_ref[b, t] == 1)
+    def _visit():
+        q = q_ref[0, 0]  # (G, D)
+        k = k_ref[0, :, 0, :]  # (page, D)
+        v = v_ref[0, :, 0, :]
+        s = (
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        )  # (G, page)
+        kpos = logical_ref[b, t] * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1
+        )
+        s = jnp.where(kpos <= pos_ref[b], s, _NEG_INF)
+        m_prev = m_ref[:, :1]  # (G, 1)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        still_masked = m_cur <= _NEG_INF / 2
+        alpha = jnp.where(still_masked, 1.0, jnp.exp(m_prev - m_cur))
+        p = jnp.where(still_masked, 0.0, jnp.exp(s - m_cur))
+        l_prev = l_ref[:, :1]
+        l_ref[...] = jnp.broadcast_to(
+            l_prev * alpha + p.sum(axis=-1, keepdims=True), l_ref.shape
+        )
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+
+    @pl.when(t == w - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_decode_attention_pallas(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    phys: jax.Array,
+    logical: jax.Array,
+    keep: jax.Array,
+    pos: jax.Array,
+    *,
+    sm_scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hk, G, D). k_pages, v_pages: (n_pages, page, Hk, D) pools.
+
+    phys/logical/keep: (B, w) int32 — physical page id, logical block id
+    and keep flag per schedule slot; pos: (B,) int32 current token
+    position per slot. Returns (B, Hk, G, D) in q's dtype.
+    """
+    b, hk, g, d = q.shape
+    _, page, hk_p, d_p = k_pages.shape
+    if (hk_p, d_p) != (hk, d):
+        raise ValueError("pool head/dim mismatch with q")
+    if phys.shape != logical.shape or phys.shape != keep.shape:
+        raise ValueError("schedule arrays must share shape (B, w)")
+    w = phys.shape[1]
+
+    grid = (b, hk, w)
+
+    def q_map(bi, hi, t, phys_ref, logical_ref, keep_ref, pos_ref):
+        del t, phys_ref, logical_ref, keep_ref, pos_ref
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, t, phys_ref, logical_ref, keep_ref, pos_ref):
+        del logical_ref, keep_ref, pos_ref
+        return (phys_ref[bi, t], 0, hi, 0)
+
+    kernel = functools.partial(_kernel, w=w, page=page, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), q_map),
+                pl.BlockSpec((1, page, 1, d), kv_map),
+                pl.BlockSpec((1, page, 1, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+    )(
+        phys.astype(jnp.int32),
+        logical.astype(jnp.int32),
+        keep.astype(jnp.int32),
+        pos.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

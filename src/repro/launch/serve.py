@@ -94,6 +94,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
+    ap.add_argument("--paged-impl", default=None,
+                    choices=["gather", "pallas", "interpret"],
+                    help="paged decode-attention read (default: pallas on "
+                         "TPU, gather elsewhere)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--legacy-server", action="store_true",
                     help="use the fixed-batch reference Server instead")
@@ -141,7 +145,9 @@ def main():
         engine_cfg=EngineConfig(
             max_slots=args.slots or args.batch, max_len=max_len
         ),
+        paged_impl=args.paged_impl,
     )
+    print(f"paged decode impl: {engine.paged_impl}")
     for b in range(args.batch):
         engine.submit(prompts[b], args.gen)
     t0 = time.perf_counter()

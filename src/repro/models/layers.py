@@ -330,16 +330,17 @@ def sparse_decode_attention_jnp(
     b_, _, hk, g, d = q.shape
     smax = k_cache.shape[1]
     nb = smax // block
-    cur = pos // block
-    # global + local + butterfly strides (dynamic, fixed count)
-    n_str = int(math.log2(nb)) if nb > 1 else 0
-    idx = [jnp.full((), i, jnp.int32) for i in range(global_blocks)]
-    for j in range(local_blocks):
-        idx.append(jnp.maximum(cur - j, 0).astype(jnp.int32))
-    for t in range(n_str):
-        idx.append((cur ^ (1 << t)).astype(jnp.int32))
-    idx = jnp.stack(idx)  # (w,)
-    idx = jnp.minimum(idx, jnp.maximum(cur, 0))  # causal: only past blocks
+    # identity page table: the contiguous cache is the paged layout with
+    # logical block == physical block, so the schedule helper is shared
+    table = jnp.arange(nb, dtype=jnp.int32)[None]
+    idx, _, first = paged_sparse_schedule(
+        table,
+        jnp.asarray(pos)[None],
+        block,
+        local_blocks=local_blocks,
+        global_blocks=global_blocks,
+    )
+    idx, first = idx[0], first[0]  # (w,)
     kg = jnp.take(k_cache.reshape(b_, nb, block, hk, d), idx, axis=1)
     vg = jnp.take(v_cache.reshape(b_, nb, block, hk, d), idx, axis=1)
     w = idx.shape[0]
@@ -349,16 +350,83 @@ def sparse_decode_attention_jnp(
     kpos = (idx[:, None] * block + jnp.arange(block)[None, :]).reshape(-1)
     ok = kpos <= pos
     s = jnp.where(ok[None, None, None, None, :], s, -jnp.inf)
-    # Duplicate blocks (XOR collisions) would double-count keys: keep the
-    # first occurrence only.
-    first = jnp.zeros((w,), bool).at[jnp.argsort(idx, stable=True)].set(
-        jnp.concatenate([jnp.array([True]), jnp.diff(jnp.sort(idx)) != 0])
-    )
+    # Duplicate blocks (XOR collisions) would double-count keys.
     ok2 = jnp.repeat(first, block)
     s = jnp.where(ok2[None, None, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)
     return _grouped_out(p.astype(vg.dtype), vg).astype(q.dtype)
+
+
+def paged_sparse_schedule(
+    page_table: jax.Array,
+    pos: jax.Array,
+    page: int,
+    *,
+    local_blocks: int,
+    global_blocks: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-slot pixelfly decode schedule over a paged cache.
+
+    The cache page is the attention block, so the sparse decode schedule
+    is a page-id computation: global anchors + local window + butterfly
+    XOR strides of the slot's *current* block, clamped causal. Returns
+    ``(logical, phys, keep)``, each (B, w): logical block ids, physical
+    page ids (mapped through ``page_table``), and a first-occurrence mask
+    disabling duplicate slots (XOR collisions would double-count keys).
+    Shared by the jnp gather path and the Pallas kernel's scalar
+    prefetch, so both read exactly the same pages.
+    """
+    b, np_ = page_table.shape
+    cur = (pos // page).astype(jnp.int32)  # (B,) current logical block
+    n_str = int(math.log2(np_)) if np_ > 1 else 0
+    idx = [jnp.full((b,), i, jnp.int32) for i in range(global_blocks)]
+    for j in range(local_blocks):
+        idx.append(jnp.maximum(cur - j, 0))
+    for t in range(n_str):
+        idx.append(cur ^ (1 << t))
+    idx = jnp.stack(idx, axis=1)  # (B, w) logical block ids
+    idx = jnp.minimum(idx, jnp.maximum(cur, 0)[:, None])  # causal blocks only
+    w = idx.shape[1]
+    phys = jnp.take_along_axis(page_table, idx, axis=1)  # (B, w)
+    order = jnp.argsort(idx, axis=1, stable=True)
+    sorted_idx = jnp.take_along_axis(idx, order, axis=1)
+    newgrp = jnp.concatenate(
+        [jnp.ones((b, 1), bool), jnp.diff(sorted_idx, axis=1) != 0], axis=1
+    )
+    keep = jnp.zeros((b, w), bool).at[jnp.arange(b)[:, None], order].set(
+        newgrp
+    )
+    return idx, phys, keep
+
+
+def _paged_attention_kernel(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    logical: jax.Array,
+    phys: jax.Array,
+    keep: jax.Array,
+    pos: jax.Array,
+    *,
+    sm_scale: float,
+    impl: str,
+) -> jax.Array:
+    """Dispatch a (B,1,Hk,G,D) paged decode read to the Pallas kernel."""
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+
+    o = paged_decode_attention_pallas(
+        q[:, 0],
+        k_pages,
+        v_pages,
+        phys,
+        logical,
+        keep,
+        pos,
+        sm_scale=sm_scale,
+        interpret=(impl == "interpret"),
+    )
+    return o[:, None]
 
 
 def paged_decode_attention_jnp(
@@ -369,6 +437,7 @@ def paged_decode_attention_jnp(
     pos: jax.Array,
     *,
     sm_scale: float,
+    impl: str | None = None,
 ) -> jax.Array:
     """Decode against a block-paged KV cache (dense over logical pages).
 
@@ -376,10 +445,25 @@ def paged_decode_attention_jnp(
     (B, P) int32 physical page per logical page; pos (B,) int32 position of
     the *current* token per slot. Unallocated table entries point at the
     shared trash page 0 — their keys land beyond ``pos`` and are masked.
+
+    ``impl``: None/"gather" -> portable jnp gathers (the reference
+    oracle); "pallas"/"interpret" -> the fused Pallas kernel reading the
+    pools in place (``repro.kernels.paged_attention``).
     """
+    if impl not in (None, "gather", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
     b = q.shape[0]
     _, page, hk, d = k_pages.shape
     np_ = page_table.shape[1]
+    if impl in ("pallas", "interpret"):
+        logical = jnp.broadcast_to(
+            jnp.arange(np_, dtype=jnp.int32)[None], (b, np_)
+        )
+        keep = jnp.ones((b, np_), jnp.int32)
+        return _paged_attention_kernel(
+            q, k_pages, v_pages, logical, page_table, keep, pos,
+            sm_scale=sm_scale, impl=impl,
+        )
     kg = jnp.take(k_pages, page_table, axis=0).reshape(b, np_ * page, hk, d)
     vg = jnp.take(v_pages, page_table, axis=0).reshape(b, np_ * page, hk, d)
     s = _grouped_logits(q, kg) * sm_scale  # (B,Hk,G,1,S)
@@ -399,27 +483,29 @@ def paged_sparse_decode_attention_jnp(
     sm_scale: float,
     local_blocks: int,
     global_blocks: int,
+    impl: str | None = None,
 ) -> jax.Array:
     """Pixelfly-sparse paged decode: each slot's query gathers only the KV
     *pages* its butterfly/local/global schedule visits — the cache page is
     the attention block, so the sparse schedule is a page-id computation.
     O(b·log n) page reads per token instead of O(n). Shapes as in
-    ``paged_decode_attention_jnp`` but with per-slot page gathers.
+    ``paged_decode_attention_jnp`` but with per-slot page gathers; same
+    ``impl`` switch (the Pallas kernel prefetches the page-id schedule).
     """
+    if impl not in (None, "gather", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
     b = q.shape[0]
     _, page, hk, d = k_pages.shape
-    np_ = page_table.shape[1]
-    cur = (pos // page).astype(jnp.int32)  # (B,) current logical block
-    n_str = int(math.log2(np_)) if np_ > 1 else 0
-    idx = [jnp.full((b,), i, jnp.int32) for i in range(global_blocks)]
-    for j in range(local_blocks):
-        idx.append(jnp.maximum(cur - j, 0))
-    for t in range(n_str):
-        idx.append(cur ^ (1 << t))
-    idx = jnp.stack(idx, axis=1)  # (B, w) logical block ids
-    idx = jnp.minimum(idx, jnp.maximum(cur, 0)[:, None])  # causal blocks only
+    idx, phys, keep = paged_sparse_schedule(
+        page_table, pos, page,
+        local_blocks=local_blocks, global_blocks=global_blocks,
+    )
+    if impl in ("pallas", "interpret"):
+        return _paged_attention_kernel(
+            q, k_pages, v_pages, idx, phys, keep, pos,
+            sm_scale=sm_scale, impl=impl,
+        )
     w = idx.shape[1]
-    phys = jnp.take_along_axis(page_table, idx, axis=1)  # (B, w)
     kg = jnp.take(k_pages, phys, axis=0).reshape(b, w * page, hk, d)
     vg = jnp.take(v_pages, phys, axis=0).reshape(b, w * page, hk, d)
     s = _grouped_logits(q, kg) * sm_scale
@@ -428,16 +514,7 @@ def paged_sparse_decode_attention_jnp(
     ).reshape(b, -1)
     ok = kpos <= pos[:, None]
     s = jnp.where(ok[:, None, None, None, :], s, -jnp.inf)
-    # XOR collisions duplicate logical blocks; keep first occurrence per row.
-    order = jnp.argsort(idx, axis=1, stable=True)
-    sorted_idx = jnp.take_along_axis(idx, order, axis=1)
-    newgrp = jnp.concatenate(
-        [jnp.ones((b, 1), bool), jnp.diff(sorted_idx, axis=1) != 0], axis=1
-    )
-    first = jnp.zeros((b, w), bool).at[jnp.arange(b)[:, None], order].set(
-        newgrp
-    )
-    ok2 = jnp.repeat(first, page, axis=1)
+    ok2 = jnp.repeat(keep, page, axis=1)
     s = jnp.where(ok2[:, None, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)
@@ -528,12 +605,15 @@ def apply_attention(
     pos: jax.Array | None = None,
     page_table: jax.Array | None = None,
     impl: str | None = None,
+    paged_impl: str | None = None,
 ):
     """Returns (y, new_cache). x: (B, S, D) [S=1 for decode].
 
     Paged modes: ``cache`` holds slot-shared page pools ``k``/``v`` of shape
     (n_pages, page, Hk, D), ``pos`` is per-slot (B,), and ``page_table``
-    (B, P) maps each slot's logical pages to physical ones.
+    (B, P) maps each slot's logical pages to physical ones. ``paged_impl``
+    selects the paged decode read: None/"gather" portable jnp gathers, or
+    "pallas"/"interpret" for the fused page-pool kernel.
     """
     c = spec.cfg
     b, s, _ = x.shape
@@ -581,10 +661,11 @@ def apply_attention(
                 sm_scale=scale,
                 local_blocks=c.attn_local_blocks,
                 global_blocks=c.attn_global_blocks,
+                impl=paged_impl,
             )
         else:
             o = paged_decode_attention_jnp(
-                qg, kc, vc, page_table, pos, sm_scale=scale
+                qg, kc, vc, page_table, pos, sm_scale=scale, impl=paged_impl
             )
     elif mode in ("decode", "decode_sparse"):
         assert cache is not None and pos is not None

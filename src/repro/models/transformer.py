@@ -105,6 +105,7 @@ def _apply_block(
     pos: jax.Array | None,
     impl: str | None,
     page_table: jax.Array | None = None,
+    paged_impl: str | None = None,
 ):
     """Returns (x, new_cache, lb_loss). ``cache`` may be a zero-size
     placeholder array (cache-less scan); it is normalized to None here and a
@@ -151,6 +152,7 @@ def _apply_block(
         pos=pos,
         page_table=page_table,
         impl=impl,
+        paged_impl=paged_impl,
     )
     x = x + y
     h = L.rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
@@ -276,6 +278,7 @@ def _run_group(
     pos,
     impl,
     page_table=None,
+    paged_impl=None,
 ):
     """Scan ``g.count`` blocks. Returns (x, new_cache, lb_sum)."""
 
@@ -285,7 +288,7 @@ def _run_group(
         xc, c_out, lb = _apply_block(
             cfg, g.kind, p, xc, positions,
             mode=mode, cache=c_in, pos=pos, impl=impl,
-            page_table=page_table,
+            page_table=page_table, paged_impl=paged_impl,
         )
         return (xc, lb_sum + lb), c_out
 
@@ -368,6 +371,7 @@ def _backbone(
     pos=None,
     impl=None,
     page_table=None,
+    paged_impl=None,
 ):
     groups = cfg.layer_groups()
     lb_total = jnp.zeros((), jnp.float32)
@@ -377,7 +381,7 @@ def _backbone(
         x, c_out, lb = _run_group(
             cfg, g, params["groups"][g.param_key], x, positions,
             mode=mode, cache=c_in, pos=pos, impl=impl,
-            page_table=page_table,
+            page_table=page_table, paged_impl=paged_impl,
         )
         new_caches.append(c_out)
         lb_total = lb_total + lb
@@ -501,13 +505,16 @@ def decode_step_paged(
     page_table: jax.Array,
     *,
     impl: str | None = None,
+    paged_impl: str | None = None,
 ):
     """Slot-indexed decode step over a block-paged KV cache.
 
     tokens (B,) int32 one token per slot; positions (B,) int32 *ragged*
     per-slot write positions; page_table (B, P) int32 logical -> physical
     page map. Idle slots pass position 0 with an all-trash page row.
-    Returns (logits (B, V), new caches).
+    ``paged_impl`` picks the paged attention read ("gather" jnp reference
+    vs the "pallas"/"interpret" page-pool kernel). Returns
+    (logits (B, V), new caches).
     """
     x = L.embed_tokens(cfg, params["embed"], tokens[:, None])
     b = x.shape[0]
@@ -519,6 +526,7 @@ def decode_step_paged(
     x, new_caches, _ = _backbone(
         cfg, params, x, pos2, mode="decode_paged", caches=caches,
         pos=positions, page_table=page_table, impl=impl,
+        paged_impl=paged_impl,
     )
     logits = L.lm_logits(cfg, params["head"], params["embed"], x[:, 0])
     return logits, new_caches

@@ -86,7 +86,10 @@ def init_vit(key: jax.Array, cfg: VisionConfig) -> dict:
         "patch": init_linear(ks[0], LinearSpec.dense(cfg.patch_dim, d, dtype=cfg.jdtype)),
         "pos": (jax.random.normal(ks[1], (cfg.num_patches + 1, d)) * 0.02).astype(cfg.jdtype),
         "cls": jnp.zeros((d,), cfg.jdtype),
-        "head": init_linear(ks[2], LinearSpec.dense(d, cfg.num_classes, dtype=cfg.jdtype)),
+        # zero-init classifier head (ViT practice): logits start at 0, so
+        # early full-batch steps at large lr can't overshoot through the
+        # randomly-initialized backbone
+        "head": {"w": jnp.zeros((d, cfg.num_classes), cfg.jdtype)},
         "final_norm": init_rmsnorm(d),
         "layers": [],
     }

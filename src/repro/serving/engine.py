@@ -58,7 +58,12 @@ class Engine:
         strategy: str = "fsdp",
         seed: int = 0,
         params=None,
+        paged_impl: str | None = None,
     ):
+        """``paged_impl`` selects the paged decode-attention read:
+        "gather" (portable jnp reference), "pallas" (fused page-pool
+        TPU kernel), or "interpret" (the kernel body interpreted, for
+        validation). None picks per platform like ``kernels.ops``."""
         self.mesh = mesh
         st = sharding.Strategy(mesh, strategy)
         self.cfg = cfg = cfg.replace(tp_size=st.tp_size, batch_axes=st.batch)
@@ -75,9 +80,21 @@ class Engine:
                 )(key)
             self.params = params
             self.kv = PagedKVCache(cfg, ecfg.max_slots, ecfg.max_len)
+            if paged_impl is None:
+                from repro.kernels.ops import default_impl
+
+                paged_impl = (
+                    "pallas" if default_impl() == "pallas" else "gather"
+                )
+            if paged_impl not in ("gather", "pallas", "interpret"):
+                raise ValueError(
+                    f"unknown paged_impl {paged_impl!r}; expected "
+                    "'gather', 'pallas' or 'interpret'"
+                )
+            self.paged_impl = paged_impl
             self._decode = jax.jit(
                 lambda p, c, t, pos, pt: T.decode_step_paged(
-                    cfg, p, c, t, pos, pt
+                    cfg, p, c, t, pos, pt, paged_impl=paged_impl
                 ),
                 donate_argnums=(1,),
             )

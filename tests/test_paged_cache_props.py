@@ -1,0 +1,152 @@
+"""Property tests: PagedKVCache allocator invariants.
+
+Random alloc/free traces against a pure-python model of the free list.
+The invariants the serving engine depends on every step: pages are never
+leaked or double-allocated, the trash page (physical page 0) is never
+handed out, freeing a slot restores ``free_pages`` and zeroes its
+``page_table`` row.
+
+A seeded numpy fuzz always runs (so the invariants gate every PR even
+without dev deps); when ``hypothesis`` is installed the same traces are
+additionally explored generatively with shrinking.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev dep optional
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import registry
+from repro.serving import PagedKVCache
+
+SLOTS, PAGES_PER_SLOT, PAGE = 3, 4, 4
+MAX_LEN = PAGES_PER_SLOT * PAGE
+
+
+def _tiny_cfg():
+    # shrink every model dim; only the cache geometry matters here
+    return registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=1, num_heads=2, num_kv_heads=1, head_dim=8,
+        attn_block=PAGE,
+    )
+
+
+def _check_invariants(kv: PagedKVCache) -> None:
+    owned = [p for pages in kv._owned.values() for p in pages]
+    # no double allocation, no trash-page ownership
+    assert len(owned) == len(set(owned))
+    assert 0 not in owned and 0 not in kv._free
+    # conservation: every non-trash page is exactly owned or free
+    assert sorted(owned + kv._free) == list(range(1, kv.n_pages))
+    assert kv.free_pages == kv.n_pages - 1 - len(owned)
+    # page_table rows mirror the owned lists, trash-padded
+    for slot in range(kv.max_slots):
+        pages = kv._owned.get(slot, [])
+        assert list(kv.page_table[slot, : len(pages)]) == pages
+        assert (kv.page_table[slot, len(pages):] == 0).all()
+
+
+def _run_trace(ops) -> None:
+    kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
+    assert kv.n_pages == SLOTS * PAGES_PER_SLOT + 1
+    for op, slot, pos in ops:
+        if op == "alloc":
+            before = len(kv._owned.get(slot, []))
+            kv.alloc_upto(slot, pos)
+            # monotone: never shrinks, backs exactly pos // page + 1
+            assert len(kv._owned[slot]) == max(before, pos // PAGE + 1)
+        else:
+            kv.free_slot(slot)
+            assert slot not in kv._owned
+            assert (kv.page_table[slot] == 0).all()
+        _check_invariants(kv)
+    for slot in range(SLOTS):
+        kv.free_slot(slot)
+    # full teardown restores every page
+    assert kv.free_pages == kv.n_pages - 1
+    assert (kv.page_table == 0).all()
+
+
+def _roundtrip(positions, slot) -> None:
+    kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
+    total = kv.free_pages
+    for pos in positions:
+        kv.alloc_upto(slot, pos)
+    want = max(p // PAGE + 1 for p in positions)
+    assert kv.free_pages == total - want
+    assert (kv.page_table[slot, :want] > 0).all()
+    kv.free_slot(slot)
+    assert kv.free_pages == total
+    assert (kv.page_table[slot] == 0).all()
+    _check_invariants(kv)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_alloc_free_trace_never_leaks_seeded(seed):
+    rng = np.random.default_rng(seed)
+    ops = [
+        (
+            "alloc" if rng.random() < 0.7 else "free",
+            int(rng.integers(0, SLOTS)),
+            int(rng.integers(0, MAX_LEN)),
+        )
+        for _ in range(int(rng.integers(5, 40)))
+    ]
+    _run_trace(ops)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_alloc_free_roundtrip_seeded(seed):
+    rng = np.random.default_rng(100 + seed)
+    positions = [int(rng.integers(0, MAX_LEN)) for _ in range(int(rng.integers(1, 8)))]
+    _roundtrip(positions, int(rng.integers(0, SLOTS)))
+
+
+def test_capacity_and_exhaustion_errors():
+    kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
+    with pytest.raises(ValueError):
+        kv.alloc_upto(0, MAX_LEN)  # beyond per-slot capacity
+    # freeing an unallocated slot is a no-op, not an error
+    kv.free_slot(1)
+    _check_invariants(kv)
+    # drain the pool: allocation must fail loudly, not hand out trash
+    for slot in range(SLOTS):
+        kv.alloc_upto(slot, MAX_LEN - 1)
+    assert kv.free_pages == 0
+    kv.free_slot(0)
+    kv._free.clear()  # simulate exhaustion with slot 0 unbacked
+    with pytest.raises(RuntimeError):
+        kv.alloc_upto(0, 0)
+    assert 0 not in [p for ps in kv._owned.values() for p in ps]
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        ops=st.lists(
+            st.tuples(
+                st.sampled_from(["alloc", "free"]),
+                st.integers(0, SLOTS - 1),
+                st.integers(0, MAX_LEN - 1),
+            ),
+            max_size=40,
+        )
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_alloc_free_trace_never_leaks(ops):
+        _run_trace(ops)
+
+    @given(
+        positions=st.lists(
+            st.integers(0, MAX_LEN - 1), min_size=1, max_size=8
+        ),
+        slot=st.integers(0, SLOTS - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_alloc_free_roundtrip_restores_free_pages(positions, slot):
+        _roundtrip(positions, slot)
