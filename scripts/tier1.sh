@@ -9,13 +9,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
-# Preflight: collection must be clean. Without this a syntax/import error
-# in one test file would silently drop that whole file from the gate.
+# Preflight: collection must be clean. Marker-less --co imports and
+# collects EVERY test file — including slow-only ones — so a syntax or
+# import error anywhere fails the gate here instead of going unnoticed
+# until someone runs the full suite. (Marker filtering happens after
+# collection, so one pass covers both the fast and the slow set.)
 # (exit 5 = "no tests collected" — clean collection, let pytest report it)
 rc=0
-python -m pytest -q --co -m "not slow" "$@" > /dev/null 2>&1 || rc=$?
+python -m pytest -q --co "$@" > /dev/null 2>&1 || rc=$?
 if [ "$rc" -ne 0 ] && [ "$rc" -ne 5 ]; then
     echo "tier1: test collection failed" >&2
-    python -m pytest -q --co -m "not slow" "$@" || exit 1
+    python -m pytest -q --co "$@" || exit 1
 fi
-exec python -m pytest -q -m "not slow" "$@"
+exec python -m pytest -q -m "not slow" --durations=10 "$@"

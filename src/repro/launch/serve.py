@@ -2,8 +2,9 @@
 
 CPU-scale demo (smoke configs) and the TPU entry point (full configs via
 the production mesh). Requests flow through ``repro.serving.Engine``:
-jit'd bucketed prefill straight into the block-paged KV cache, one jit'd
-decode step per token over all slots, admission/eviction per step.
+batched bucketed prefill (one jit'd call per same-bucket admission
+group) straight into the block-paged KV cache, one jit'd decode step per
+token over all slots, admission/eviction per step.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -50,9 +51,7 @@ class Server:
             )
         self.st = st
 
-    def generate(
-        self, prompts: np.ndarray, gen_len: int, *, greedy: bool = True
-    ) -> np.ndarray:
+    def generate(self, prompts: np.ndarray, gen_len: int) -> np.ndarray:
         """prompts: (B, P) int32 -> (B, gen_len) int32."""
         cfg = self.cfg
         b, plen = prompts.shape
@@ -93,6 +92,11 @@ def main():
                     help="per-slot KV capacity (default: fits prompt+gen)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--lookahead", type=int, default=0,
+                    help="admission lookahead window K (default: 2*slots)")
+    ap.add_argument("--max-prefill-batch", type=int, default=0,
+                    help="cap requests per jit'd prefill call (default: "
+                         "slots; 1 = per-request admission baseline)")
     ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
     ap.add_argument("--paged-impl", default=None,
                     choices=["gather", "pallas", "interpret"],
@@ -143,7 +147,10 @@ def main():
         mesh,
         strategy=args.strategy,
         engine_cfg=EngineConfig(
-            max_slots=args.slots or args.batch, max_len=max_len
+            max_slots=args.slots or args.batch,
+            max_len=max_len,
+            lookahead=args.lookahead or None,
+            max_prefill_batch=args.max_prefill_batch,
         ),
         paged_impl=args.paged_impl,
     )
@@ -161,7 +168,8 @@ def main():
         f"{s['decode_tok_s']:.1f} tok/s decode, "
         f"p50 {s['p50_token_latency_ms']:.1f}ms "
         f"p95 {s['p95_token_latency_ms']:.1f}ms, "
-        f"occupancy {s['mean_occupancy']:.2f})"
+        f"occupancy {s['mean_occupancy']:.2f}, "
+        f"{s['mean_prefill_batch']:.1f} req/prefill)"
     )
     grid = np.stack(
         [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]

@@ -178,13 +178,18 @@ def flash_attention_jnp(
 ) -> jax.Array:
     """Memory-efficient causal attention: lax.scan over KV chunks with
     online softmax. q (B,Sq,Hk,G,D); k, v (B,Sk,Hk,D). Never materializes
-    the (Sq, Sk) score matrix.
+    the (Sq, Sk) score matrix. ``Sk`` need not be a chunk multiple: KV is
+    zero-padded to one and the padded keys masked out.
     """
     b, sq, hk, g, d = q.shape
-    sk = k.shape[1]
+    sk_real = sk = k.shape[1]
     chunk = min(chunk, sk)
+    pad = (-sk) % chunk  # KV need not be a chunk multiple: pad and mask
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk += pad
     n_chunks = sk // chunk
-    assert sk % chunk == 0
     q32 = q.astype(jnp.float32) * sm_scale
 
     kc = k.reshape(b, n_chunks, chunk, hk, d)
@@ -197,9 +202,11 @@ def flash_attention_jnp(
         ci, kb, vb = inputs
         s = _grouped_logits(q32.astype(q.dtype), kb).astype(jnp.float32)
         s = s * 1.0  # already scaled via q32? keep q dtype path simple
-        if causal:
+        if causal or pad:
             kpos = ci * chunk + jnp.arange(chunk)
-            mask = kpos[None, :] <= qpos[:, None]
+            mask = jnp.broadcast_to(kpos[None, :] < sk_real, (sq, chunk))
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
             s = jnp.where(mask[None, None, None], s, -jnp.inf)
         m_new = jnp.maximum(m, s.max(axis=-1))
         masked = jnp.isneginf(m_new)

@@ -14,8 +14,9 @@ Entry points:
 
 Serving (block-paged KV cache, ``repro.serving``):
   init_paged_cache(cfg, n_pages, page)         -> paged cache pools
-  prefill_paged(cfg, params, tokens, plen, caches, page_row)
-                                               -> (last-real-token logits, caches)
+  prefill_paged(cfg, params, tokens, plens, caches, page_rows)
+                                               -> ((N, V) last-real-token logits, caches)
+                                               [batched: N requests, one bucket]
   decode_step_paged(cfg, params, caches, tokens, positions, page_table)
                                                -> (logits, caches)  [ragged positions]
 """
@@ -435,39 +436,49 @@ def prefill_paged(
     cfg: ModelConfig,
     params: dict,
     tokens: jax.Array,
-    plen: jax.Array,
+    plens: jax.Array,
     caches: list,
-    page_row: jax.Array,
+    page_rows: jax.Array,
     *,
     impl: str | None = None,
 ):
-    """Chunked (bucketed) prefill into a block-paged KV cache.
+    """Batched bucketed prefill into a block-paged KV cache.
 
-    One jit'd full-sequence pass — no per-token loop: ``tokens`` (1, S) is
-    the prompt right-padded to a page-multiple bucket ``S``; the causal
-    block-sparse schedule runs inside (``apply_attention`` prefill mode).
-    ``plen`` () int32 is the real prompt length; ``page_row`` (S//page,)
-    the slot's physical pages. Keys written for padded positions land
-    beyond ``plen`` in logical order and are masked by every decode read.
+    One jit'd full-sequence pass over a whole admission group — no
+    per-token loop and no per-request call: ``tokens`` (N, S) holds N
+    prompts right-padded to the shared page-multiple bucket ``S``;
+    ``plens`` (N,) int32 the real prompt lengths; ``page_rows``
+    (N, S//page) each request's physical pages (entries past
+    ``pages_for_len(plen)`` point at the trash page 0, so padding keys
+    scatter there and real pages stay untouched). The causal schedule
+    runs inside ``apply_attention`` prefill mode; keys written for padded
+    positions land beyond ``plen`` in logical order and are masked by
+    every decode read.
 
-    Returns (logits at the last real token (V,), updated paged caches).
+    Returns (logits at each request's last real token (N, V), updated
+    paged caches).
     """
     x = _inputs_to_x(cfg, params, {"tokens": tokens})
     b, s, _ = x.shape
     positions = _positions(cfg, {}, b, s)
     x, kv, _ = _backbone(cfg, params, x, positions, mode="prefill", impl=impl)
-    xe = jnp.take(x, plen - 1, axis=1)  # (1, d) last *real* prompt token
+    # (N, d) hidden state at each request's last *real* prompt token
+    xe = jnp.take_along_axis(x, (plens - 1)[:, None, None], axis=1)[:, 0]
     logits = L.lm_logits(cfg, params["head"], params["embed"], xe)
 
     new_caches = []
     for pool, fresh in zip(caches, kv):
         def scat(buf, kvs):
             count, _, page, hk, d = buf.shape
-            fb = kvs[:, 0].reshape(count, s // page, page, hk, d)
-            return buf.at[:, page_row].set(fb.astype(buf.dtype))
+            fb = kvs.reshape(count, b, s // page, page, hk, d)
+            # page_rows (N, P): scatter every request's pages in one shot.
+            # Rows collide only on the shared trash page 0 (padding), where
+            # last-write-wins is fine — trash is masked by logical position
+            # on every read.
+            return buf.at[:, page_rows].set(fb.astype(buf.dtype))
 
         new_caches.append(jax.tree.map(scat, pool, fresh))
-    return logits[0], new_caches
+    return logits, new_caches
 
 
 def decode_step(

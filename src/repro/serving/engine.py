@@ -1,15 +1,21 @@
 """Continuous-batching serving engine over the block-paged KV cache.
 
-``Engine.submit()`` enqueues requests; each ``step()`` admits whatever
-fits (bucketed jit'd prefill straight into the paged cache — no per-token
-prefill loop), runs ONE jit'd decode step over all slots (ragged per-slot
-positions, idle slots masked to the trash page), and evicts finished
-sequences so their slot and pages are reusable the very next step.
-``drain()`` loops until the queue and slots are empty.
+``Engine.submit()`` enqueues requests; each ``step()`` drains the waiting
+queue in one admission pass — the first ``lookahead`` queued requests are
+grouped by prefill bucket and each same-bucket group is admitted with ONE
+jit'd batched prefill call and ONE host sync (no per-request prefill
+loop, and an oversized head-of-queue request no longer blocks smaller
+ones behind it) — then runs ONE jit'd decode step over all slots (ragged
+per-slot positions, idle slots masked to the trash page), and evicts
+finished sequences so their slot and pages are reusable the very next
+step. ``drain()`` loops until the queue and slots are empty.
 
 The decode step is always shaped ``(max_slots,)`` and prefill shapes are
-bucketed to power-of-two page counts, so the engine compiles a handful of
-programs total no matter how ragged the traffic is.
+bucketed to power-of-two page counts *and* power-of-two batch sizes
+(groups split greedily into exact power-of-two chunks, so every call
+fills its compiled program), so the engine compiles a handful of programs
+total no matter how ragged the traffic is. Page allocation is trimmed to
+the real prompt length — bucket padding never pins real pages.
 """
 
 from __future__ import annotations
@@ -33,15 +39,48 @@ __all__ = ["Engine", "EngineConfig"]
 
 class EngineConfig:
     """Serving knobs: ``max_slots`` concurrent sequences, each with
-    ``max_len`` tokens of page-granular KV capacity."""
+    ``max_len`` tokens of page-granular KV capacity. ``lookahead`` bounds
+    how many waiting requests one admission pass may inspect (default
+    ``2 * max_slots``): within that window smaller requests may be
+    admitted past an oversized head-of-queue one (no aging — the big
+    request waits until slots/pages fit it). ``max_prefill_batch``
+    caps how many same-bucket requests share one jit'd prefill call
+    (0 -> ``max_slots``; 1 reproduces per-request admission, kept as the
+    benchmark baseline)."""
 
-    def __init__(self, max_slots: int = 8, max_len: int = 512):
+    def __init__(
+        self,
+        max_slots: int = 8,
+        max_len: int = 512,
+        *,
+        lookahead: int | None = None,
+        max_prefill_batch: int = 0,
+        n_pages: int = 0,
+    ):
         self.max_slots = max_slots
         self.max_len = max_len
+        self.n_pages = n_pages  # 0 -> worst-case pool (see PagedKVCache)
+        self.lookahead = (
+            lookahead if lookahead is not None else 2 * max_slots
+        )
+        if self.lookahead < 1:
+            raise ValueError("lookahead must be >= 1")
+        self.max_prefill_batch = max_prefill_batch or max_slots
+        if not 1 <= self.max_prefill_batch <= max_slots:
+            raise ValueError(
+                f"max_prefill_batch {self.max_prefill_batch} must be in "
+                f"[1, max_slots={max_slots}]"
+            )
 
     def rounded(self, page: int) -> "EngineConfig":
         max_len = -(-self.max_len // page) * page
-        return EngineConfig(self.max_slots, max_len)
+        return EngineConfig(
+            self.max_slots,
+            max_len,
+            lookahead=self.lookahead,
+            max_prefill_batch=self.max_prefill_batch,
+            n_pages=self.n_pages,
+        )
 
 
 def _next_pow2(n: int) -> int:
@@ -79,7 +118,9 @@ class Engine:
                     lambda k: T.init_model(k, cfg), out_shardings=psh
                 )(key)
             self.params = params
-            self.kv = PagedKVCache(cfg, ecfg.max_slots, ecfg.max_len)
+            self.kv = PagedKVCache(
+                cfg, ecfg.max_slots, ecfg.max_len, n_pages=ecfg.n_pages
+            )
             if paged_impl is None:
                 from repro.kernels.ops import default_impl
 
@@ -98,15 +139,36 @@ class Engine:
                 ),
                 donate_argnums=(1,),
             )
-            # one wrapper; jax.jit specializes per (1, S) bucket shape
+            # one wrapper; jax.jit specializes per (N, S) bucket shape
             self._prefill = jax.jit(
-                lambda p, t, plen, c, row: T.prefill_paged(
-                    cfg, p, t, plen, c, row
+                lambda p, t, plens, c, rows: T.prefill_paged(
+                    cfg, p, t, plens, c, rows
                 ),
                 donate_argnums=(3,),
             )
+            # One throwaway all-idle decode step (every slot masked to the
+            # trash page): compiles the decode program up front AND leaves
+            # the pools with the aval/layout the decode step produces —
+            # the steady state every later program sees. Without this,
+            # each prefill bucket compiled against freshly-initialized
+            # pools is compiled a SECOND time at serving time, a
+            # multi-hundred-ms hiccup per bucket mid-traffic.
+            zeros = jnp.zeros((ecfg.max_slots,), jnp.int32)
+            _, self.kv.buffers = self._decode(
+                self.params,
+                self.kv.buffers,
+                zeros,
+                zeros,
+                jnp.zeros_like(jnp.asarray(self.kv.page_table)),
+            )
         self.scheduler = Scheduler(ecfg.max_slots)
         self.stats = ServeStats()
+        # slot -> total pages its sequence may ever need (prompt + decode
+        # growth). Only pages_for_len(plen) are allocated at admission;
+        # the remainder is a *reservation* the admission budget must not
+        # hand out twice, or an oversubscribed pool would exhaust
+        # mid-decode (alloc_upto raises, losing every in-flight request).
+        self._page_need: dict[int, int] = {}
         self._uid = 0
         self._step_idx = 0
 
@@ -140,45 +202,120 @@ class Engine:
         )
         return nb * self.kv.page
 
-    def _admit_one(self) -> SequenceState | None:
-        req = self.scheduler.peek_waiting()
-        if req is None or self.scheduler.free_slot() is None:
-            return None
-        s = self._bucket(req.prompt.size)
-        if self.kv.pages_for_len(s) > self.kv.free_pages:
-            return None  # admit once pages free up
-        state = self.scheduler.admit(self._step_idx)
-        assert state is not None
-        plen = state.plen
-        self.kv.alloc_upto(state.slot, s - 1)
-        row = jnp.asarray(self.kv.table_row(state.slot, s // self.kv.page))
-        tokens = np.zeros((1, s), np.int32)
-        tokens[0, :plen] = state.request.prompt
+    def _batch_bucket(self, n: int) -> int:
+        """Pad admission-group sizes to powers of two (capped at
+        ``max_slots``): with S also bucketed, the engine compiles
+        O(log slots * log lengths) prefill programs total."""
+        return min(_next_pow2(n), self.ecfg.max_slots)
+
+    def _lifetime_pages(self, req) -> int:
+        """Worst-case pages a request can ever touch, capped at slot
+        capacity. The last generated token is returned but never written
+        back (no decode step follows it), so the final write position is
+        ``plen + max_new_tokens - 2``."""
+        return self.kv.pages_for_len(
+            min(req.prompt.size + req.max_new_tokens - 1, self.ecfg.max_len)
+        )
+
+    def _reserved_pages(self) -> int:
+        """Pages promised to active sequences for decode growth but not
+        yet allocated."""
+        return sum(
+            max(0, need - self.kv.pages_owned(slot))
+            for slot, need in self._page_need.items()
+        )
+
+    def _plan_admission(self) -> dict[int, list]:
+        """One bounded-lookahead pass over the waiting queue: group the
+        first ``lookahead`` requests into same-bucket prefill waves that
+        fit the current slot and page budget. A request whose pages don't
+        fit is *skipped* (not blocking): later, smaller requests in the
+        window may still be admitted this step. The budget covers each
+        request's whole lifetime (prompt + decode growth), so admission
+        can never oversubscribe into a mid-decode out-of-pages crash."""
+        groups: dict[int, list] = {}
+        free_slots = self.scheduler.num_free_slots
+        if free_slots == 0:
+            return groups
+        budget = self.kv.free_pages - self._reserved_pages()
+        for req in self.scheduler.peek_admissible(self.ecfg.lookahead):
+            if free_slots == 0:
+                break
+            need = self._lifetime_pages(req)
+            if need > budget:
+                continue  # admit once pages free up; try the next one
+            groups.setdefault(self._bucket(req.prompt.size), []).append(req)
+            free_slots -= 1
+            budget -= need
+        return groups
+
+    def _admit_group(self, reqs: list, s: int) -> list[SequenceState]:
+        """Admit one same-bucket group: ONE jit'd ``prefill_paged`` call
+        over tokens (N, S) and ONE host sync for all N requests. Page
+        allocation is trimmed to each real prompt — bucket-padding keys
+        scatter to the trash page."""
+        nb = len(reqs)
+        # step()'s greedy chunking hands over exact power-of-two groups,
+        # so every call fills its compiled (N, S) program — no batch rows
+        # are ever padded
+        assert nb == self._batch_bucket(nb)
+        n_pages = s // self.kv.page
+        tokens = np.zeros((nb, s), np.int32)
+        plens = np.empty((nb,), np.int32)
+        rows = np.zeros((nb, n_pages), np.int32)
+        states: list[SequenceState] = []
+        for i, req in enumerate(reqs):
+            state = self.scheduler.admit(self._step_idx, request=req)
+            assert state is not None
+            self._page_need[state.slot] = self._lifetime_pages(req)
+            self.kv.alloc_upto(state.slot, state.plen - 1)
+            tokens[i, : state.plen] = req.prompt
+            plens[i] = state.plen
+            rows[i] = self.kv.bucket_row(state.slot, state.plen, n_pages)
+            states.append(state)
         t0 = time.perf_counter()
         with self.mesh:
             logits, self.kv.buffers = self._prefill(
                 self.params,
                 jnp.asarray(tokens),
-                jnp.asarray(plen, jnp.int32),
+                jnp.asarray(plens),
                 self.kv.buffers,
-                row,
+                jnp.asarray(rows),
             )
-            tok = int(jax.block_until_ready(jnp.argmax(logits)))
-        self.stats.record_prefill(plen, time.perf_counter() - t0, emitted=1)
-        state.generated.append(tok)
-        state.pos = plen
-        return state
+            toks = np.asarray(
+                jax.block_until_ready(jnp.argmax(logits, axis=-1))
+            )
+        dt = time.perf_counter() - t0
+        self.stats.record_prefill(
+            int(sum(st_.plen for st_ in states)),
+            dt,
+            emitted=len(states),
+            batch=len(states),
+            bucket=(nb, s),
+        )
+        for i, state in enumerate(states):
+            state.generated.append(int(toks[i]))
+            state.pos = state.plen
+        return states
 
     # ---- stepping ----------------------------------------------------
     def step(self) -> list[FinishedRequest]:
-        """One scheduler iteration: admit -> decode -> evict."""
+        """One scheduler iteration: admit (batched) -> decode -> evict.
+
+        Same-bucket groups are split greedily into power-of-two chunks
+        (4 -> one call of 4; 3 -> 2+1) capped at ``max_prefill_batch``:
+        every chunk exactly fills its compiled (N, S) program, so batching
+        never pays for padded batch rows."""
         finished: list[FinishedRequest] = []
-        while True:
-            state = self._admit_one()
-            if state is None:
-                break
-            if state.done:  # max_new_tokens == 1 or instant EOS
-                finished.append(self._finish(state))
+        cap = self.ecfg.max_prefill_batch
+        for s, reqs in self._plan_admission().items():
+            i = 0
+            while i < len(reqs):
+                n = 1 << (min(len(reqs) - i, cap).bit_length() - 1)
+                for state in self._admit_group(reqs[i : i + n], s):
+                    if state.done:  # max_new_tokens == 1 or instant EOS
+                        finished.append(self._finish(state))
+                i += n
 
         # a prompt that already fills its slot cannot take a decode step
         for st_ in list(self.scheduler.active()):
@@ -224,6 +361,7 @@ class Engine:
     ) -> FinishedRequest:
         self.scheduler.evict(state.slot)
         self.kv.free_slot(state.slot)
+        self._page_need.pop(state.slot, None)
         self.stats.record_finish()
         if reason is None:
             eos = state.request.eos_id

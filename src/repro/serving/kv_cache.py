@@ -24,7 +24,19 @@ __all__ = ["PagedKVCache"]
 
 
 class PagedKVCache:
-    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        max_slots: int,
+        max_len: int,
+        *,
+        n_pages: int = 0,
+    ):
+        """``n_pages=0`` sizes the pool worst-case (every slot full).
+        A smaller pool *oversubscribes* the cache — the engine budgets
+        each sequence's lifetime pages (prompt + decode growth, capped at
+        ``max_new_tokens``) at admission, so more sequences fit than the
+        worst case without ``alloc_upto`` ever running dry mid-decode."""
         page = cfg.attn_block
         if max_len % page:
             raise ValueError(
@@ -37,7 +49,14 @@ class PagedKVCache:
         self.pages_per_seq = max_len // page
         self.max_len = max_len
         # worst case every slot is full, +1 for the trash page
-        self.n_pages = max_slots * self.pages_per_seq + 1
+        worst = max_slots * self.pages_per_seq + 1
+        self.n_pages = n_pages or worst
+        if not self.pages_per_seq + 1 <= self.n_pages <= worst:
+            raise ValueError(
+                f"n_pages {self.n_pages} must be in "
+                f"[{self.pages_per_seq + 1}, {worst}] (one full slot + "
+                "trash .. every slot full + trash)"
+            )
         self.buffers = T.init_paged_cache(cfg, self.n_pages, page)
         self.page_table = np.zeros(
             (max_slots, self.pages_per_seq), np.int32
@@ -52,6 +71,9 @@ class PagedKVCache:
 
     def pages_for_len(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page)
+
+    def pages_owned(self, slot: int) -> int:
+        return len(self._owned.get(slot, []))
 
     def alloc_upto(self, slot: int, pos: int) -> None:
         """Ensure logical pages [0, pos // page] of ``slot`` are backed."""
@@ -76,6 +98,22 @@ class PagedKVCache:
     # ---- views -------------------------------------------------------
     def table_row(self, slot: int, n_pages: int) -> np.ndarray:
         return self.page_table[slot, :n_pages].copy()
+
+    def bucket_row(self, slot: int, plen: int, n_pages: int) -> np.ndarray:
+        """Prefill page row for a bucket of ``n_pages``: the slot's
+        ``pages_for_len(plen)`` allocated pages followed by trash-page
+        zeros — page allocation is trimmed to the real prompt, and the
+        bucket-padding keys scatter to the trash page (which every read
+        masks by logical position)."""
+        need = self.pages_for_len(plen)
+        if need > n_pages:
+            raise ValueError(
+                f"prompt of {plen} tokens needs {need} pages, bucket has "
+                f"{n_pages}"
+            )
+        row = np.zeros(n_pages, np.int32)
+        row[:need] = self.page_table[slot, :need]
+        return row
 
     def memory_bytes(self) -> int:
         return sum(

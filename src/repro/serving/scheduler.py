@@ -4,6 +4,9 @@ FCFS admission into a fixed set of cache slots: sequences are admitted the
 moment a slot (and its KV pages) frees up and evicted the step they
 finish — no full-batch barrier, no recompilation (the decode step is
 always shaped (max_slots,), idle slots ride along masked).
+``peek_admissible(k)`` exposes a bounded lookahead window so the engine
+can batch same-bucket prefills and admit around an oversized
+head-of-queue request.
 """
 
 from __future__ import annotations
@@ -27,8 +30,20 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
-    def peek_waiting(self) -> Request | None:
-        return self.waiting[0] if self.waiting else None
+    def peek_admissible(self, k: int) -> list[Request]:
+        """Bounded-lookahead admission window: the first ``min(k,
+        len(waiting))`` queued requests in FCFS order, not popped. The
+        engine filters this window by slot/page budget and may admit
+        later (smaller) requests past an oversized head-of-queue one.
+        ``k`` bounds how many requests each admission pass may consider
+        (and thus admit past the head) — it is not an anti-starvation
+        guarantee: under sustained small-request traffic an oversized
+        request can wait until the pool drains (aging/preemption is
+        future work)."""
+        if k < 1:
+            raise ValueError("lookahead k must be >= 1")
+        n = min(k, len(self.waiting))
+        return [self.waiting[i] for i in range(n)]
 
     # ---- slots -------------------------------------------------------
     def free_slot(self) -> int | None:
@@ -37,12 +52,34 @@ class Scheduler:
                 return i
         return None
 
-    def admit(self, step: int) -> SequenceState | None:
-        """Bind the head-of-queue request to a free slot (None if neither)."""
+    @property
+    def num_free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
+
+    def admit(
+        self, step: int, *, request: Request | None = None
+    ) -> SequenceState | None:
+        """Bind a waiting request to a free slot (None if neither).
+
+        ``request=None`` takes the head of the queue (FCFS); passing a
+        specific request (one returned by ``peek_admissible``) removes it
+        from wherever it sits in the queue — that's how the engine's
+        lookahead admits around an oversized head-of-line request."""
         slot = self.free_slot()
         if slot is None or not self.waiting:
             return None
-        req = self.waiting.popleft()
+        if request is None:
+            req = self.waiting.popleft()
+        else:
+            # remove by identity: dataclass equality would compare numpy
+            # prompt arrays (ambiguous-truth ValueError on lookalikes)
+            for i, r in enumerate(self.waiting):
+                if r is request:
+                    del self.waiting[i]
+                    break
+            else:
+                raise ValueError("request is not in the waiting queue")
+            req = request
         state = SequenceState(request=req, slot=slot, admit_step=step)
         self.slots[slot] = state
         return state

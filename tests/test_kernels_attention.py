@@ -44,6 +44,34 @@ def test_pallas_matches_oracle(shape, causal):
     )
 
 
+@pytest.mark.parametrize("sq,sk,chunk", [(192, 192, 128), (140, 140, 128), (8, 200, 64)])
+def test_flash_jnp_non_multiple_chunk(sq, sk, chunk):
+    """Regression: flash_attention_jnp used to assert when the KV length
+    was not a multiple of ``attn_chunk`` (non-power-of-two serving
+    buckets, e.g. 192 with chunk 128). Padded chunks must be masked, not
+    fatal."""
+    import jax
+
+    from repro.models import layers as L
+
+    rng = np.random.default_rng(0)
+    hk, g, d = 2, 2, 32
+    q = jnp.asarray(rng.standard_normal((2, sq, hk, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, sk, hk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, sk, hk, d)), jnp.float32)
+    got = L.flash_attention_jnp(
+        q, k, v, causal=True, chunk=chunk, sm_scale=d ** -0.5
+    )
+    # dense reference with the same grouped layout
+    s = L._grouped_logits(q, k) * d ** -0.5
+    mask = np.arange(sk)[None, :] <= np.arange(sq)[:, None]
+    s = jnp.where(jnp.asarray(mask)[None, None, None], s, -jnp.inf)
+    want = L._grouped_out(jax.nn.softmax(s, axis=-1), v)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
 def test_full_mask_equals_dense_attention():
     """With every block scheduled, block-sparse attention == dense."""
     b, h, s, d, blk = 2, 2, 256, 64, 64
