@@ -14,6 +14,10 @@ Three measurements on the same smoke config and shared weights:
    where admission dominates: batched bucketed prefill (one jit'd call +
    one host sync per same-bucket group) vs the per-request-admission
    baseline (``max_prefill_batch=1``) on the identical trace.
+4. **decode-by-sampler** — the uniform workload served greedy vs fully
+   sampled (temperature + top-k + top-p + repetition penalty, seeded per
+   request). Sampling is fused into the jit'd decode step, so sampled
+   decode tok/s should sit within ~10% of greedy.
 
 Every (N, S) prefill bucket a timed trace will hit is compiled *before*
 the clock starts (``_warm_buckets``), so latency percentiles measure
@@ -21,10 +25,17 @@ steady-state serving, not JIT.
 
 Emits one CSV row per scenario and writes ``BENCH_serve.json`` (under
 ``--json DIR`` when invoked via ``benchmarks.run``).
+
+``--smoke`` shrinks the model and every trace to a seconds-scale dry
+run of all four scenarios (JSON goes to a temp dir, never clobbering
+the tracked ``BENCH_serve.json``) — ``scripts/tier1.sh`` runs it so
+benchmark-script breakage fails tier 1 instead of rotting silently.
 """
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -33,19 +44,29 @@ from benchmarks.common import emit, emit_json
 from repro.configs import registry
 from repro.launch.mesh import make_local_mesh
 from repro.launch.serve import Server
-from repro.serving import Engine, EngineConfig, ServeStats
+from repro.serving import Engine, EngineConfig, SamplingParams, ServeStats
 
 ARCH = "qwen3-1.7b"
 BATCH = 4
 PROMPT_LEN = 32
 GEN = 16
+# the fully-loaded sampled scenario (every filter live)
+SAMPLED = SamplingParams(
+    temperature=0.8, top_k=40, top_p=0.95, repetition_penalty=1.1
+)
 
 
-def _warm_buckets(engine: Engine, lens: list[int]) -> None:
+def _warm_buckets(
+    engine: Engine,
+    lens: list[int],
+    sampling: SamplingParams | None = None,
+) -> None:
     """Compile every prefill program a trace can reach before timing: for
     each S bucket the lens map to, drive one admission group at every
     power-of-two batch size up to ``max_prefill_batch`` (plus the decode
-    program via drain). Resets the engine's stats afterwards."""
+    program via drain). ``sampling`` warms the same buckets' *sampled*
+    program variants instead of the plain ones. Resets the engine's
+    stats afterwards."""
     vocab = engine.cfg.vocab_size
     rng = np.random.default_rng(4321)
     nvals, n = {1}, 1
@@ -59,25 +80,47 @@ def _warm_buckets(engine: Engine, lens: list[int]) -> None:
         for n in sorted(nvals):
             for _ in range(n):
                 engine.submit(
-                    rng.integers(0, vocab, plen).astype(np.int32), 2
+                    rng.integers(0, vocab, plen).astype(np.int32), 2,
+                    sampling=sampling,
                 )
             engine.drain()
     engine.stats = ServeStats()
 
 
-def _measure_uniform(engine: Engine, prompts: np.ndarray, gen: int) -> dict:
-    """Warm the jits, reset stats, serve one uniform wave, summarize."""
-    _warm_buckets(engine, [prompts.shape[1]])
-    t0 = time.perf_counter()
-    for b in range(prompts.shape[0]):
-        engine.submit(prompts[b], gen)
-    finished = engine.drain()
-    wall_s = time.perf_counter() - t0
-    out = engine.stats_summary()
-    tokens = sum(len(f.tokens) for f in finished)
-    out["wall_tok_s"] = round(tokens / wall_s, 2)
-    out["wall_s"] = round(wall_s, 4)
-    return out
+def _measure_uniform(
+    engine: Engine,
+    prompts: np.ndarray,
+    gen: int,
+    sampling: SamplingParams | None = None,
+    repeats: int = 3,
+) -> dict:
+    """Warm the jits, then serve the uniform wave ``repeats`` times and
+    keep the best run by decode tok/s (every program is warm, so repeats
+    are i.i.d. — best-of shields the scenario from load noise).
+    ``sampling``: per-request params (request b gets seed+b); None keeps
+    the greedy default."""
+    _warm_buckets(engine, [prompts.shape[1]], sampling)
+    best: dict | None = None
+    for _ in range(repeats):
+        engine.stats = ServeStats()
+        t0 = time.perf_counter()
+        for b in range(prompts.shape[0]):
+            engine.submit(
+                prompts[b],
+                gen,
+                sampling=None
+                if sampling is None
+                else dataclasses.replace(sampling, seed=sampling.seed + b),
+            )
+        finished = engine.drain()
+        wall_s = time.perf_counter() - t0
+        out = engine.stats_summary()
+        tokens = sum(len(f.tokens) for f in finished)
+        out["wall_tok_s"] = round(tokens / wall_s, 2)
+        out["wall_s"] = round(wall_s, 4)
+        if best is None or out["decode_tok_s"] > best["decode_tok_s"]:
+            best = out
+    return best
 
 
 def _measure_trace(
@@ -108,61 +151,89 @@ def _measure_trace(
     return best
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     cfg = registry.get_smoke(ARCH, sparse=True)
+    batch, prompt_len, gen, repeats = BATCH, PROMPT_LEN, GEN, 3
+    if smoke:
+        # seconds-scale dry run of every scenario: tiny model, tiny
+        # traces, one repeat, JSON into a temp dir (the real
+        # BENCH_serve.json trajectory stays untouched)
+        import tempfile
+
+        from benchmarks import common
+
+        common.set_json_dir(tempfile.mkdtemp(prefix="bench_serve_smoke_"))
+        cfg = cfg.replace(num_layers=2, vocab_size=256)
+        batch, prompt_len, gen, repeats = 2, 8, 4, 1
     mesh = make_local_mesh()
     rng = np.random.default_rng(0)
     prompts = rng.integers(
-        0, cfg.vocab_size, size=(BATCH, PROMPT_LEN), dtype=np.int32
+        0, cfg.vocab_size, size=(batch, prompt_len), dtype=np.int32
     )
 
     # ---- seed Server baseline (fixed batch, per-token prefill loop)
     server = Server(cfg, mesh)
-    server.generate(prompts[:, :PROMPT_LEN], 2)  # warm the decode jit
+    server.generate(prompts[:, :prompt_len], 2)  # warm the decode jit
     t0 = time.perf_counter()
-    out = server.generate(prompts, GEN)
+    out = server.generate(prompts, gen)
     server_s = time.perf_counter() - t0
     server_tokens = int(out.size)
     server_tok_s = server_tokens / server_s
 
     # ---- engine, uniform workload (same requests, shared weights)
-    max_len = PROMPT_LEN + GEN + 1
+    max_len = prompt_len + gen + 1
     engine = Engine(
         cfg,
         mesh,
-        engine_cfg=EngineConfig(max_slots=BATCH, max_len=max_len),
+        engine_cfg=EngineConfig(max_slots=batch, max_len=max_len),
         params=server.params,
     )
-    uniform = _measure_uniform(engine, prompts, GEN)
+    uniform = _measure_uniform(engine, prompts, gen, repeats=repeats)
+
+    # ---- decode-by-sampler: identical workload, fully-loaded sampling
+    # on the same (already warm) engine — sampling is fused into the
+    # jit'd step, so this should cost within ~10% of greedy decode
+    keys = ("decode_tok_s", "p95_token_latency_ms", "p50_token_latency_ms")
+    sampled = _measure_uniform(
+        engine, prompts, gen, sampling=SAMPLED, repeats=repeats
+    )
+    by_sampler = {
+        "greedy": {k: uniform[k] for k in keys},
+        SAMPLED.kind: {k: sampled[k] for k in keys},
+        "sampled_vs_greedy": round(
+            sampled["decode_tok_s"] / max(uniform["decode_tok_s"], 1e-9),
+            4,
+        ),
+    }
 
     # ---- per-impl decode comparison: jnp gather path vs the Pallas
     # paged kernel (off TPU the interpreted kernel stands in for it, so
     # the json tracks parity-path numbers on every platform)
     base_impl = engine.paged_impl
     other_impl = "interpret" if base_impl == "gather" else "gather"
-    keys = ("decode_tok_s", "p95_token_latency_ms", "p50_token_latency_ms")
     by_impl = {base_impl: {k: uniform[k] for k in keys}}
     engine_o = Engine(
         cfg,
         mesh,
-        engine_cfg=EngineConfig(max_slots=BATCH, max_len=max_len),
+        engine_cfg=EngineConfig(max_slots=batch, max_len=max_len),
         params=server.params,
         paged_impl=other_impl,
     )
-    other = _measure_uniform(engine_o, prompts, GEN)
+    other = _measure_uniform(engine_o, prompts, gen, repeats=repeats)
     by_impl[other_impl] = {k: other[k] for k in keys}
 
     # ---- engine, mixed-length trace with mid-flight arrivals
     engine2 = Engine(
         cfg,
         mesh,
-        engine_cfg=EngineConfig(max_slots=BATCH, max_len=2 * max_len),
+        engine_cfg=EngineConfig(max_slots=batch, max_len=2 * max_len),
         params=server.params,
     )
     rng = np.random.default_rng(1)
-    n_req = 2 * BATCH
-    lens = [int(rng.integers(8, 2 * PROMPT_LEN)) for _ in range(n_req)]
-    gens = [int(rng.integers(GEN // 2, 2 * GEN)) for _ in range(n_req)]
+    n_req = 2 * batch
+    lens = [int(rng.integers(8, 2 * prompt_len)) for _ in range(n_req)]
+    gens = [int(rng.integers(max(gen // 2, 1), 2 * gen))
+            for _ in range(n_req)]
     # warm every (N, S) bucket the trace can hit, not just prompt-32:
     # otherwise other buckets JIT inside the measured region and pollute
     # the latency percentiles
@@ -174,7 +245,7 @@ def run() -> None:
             gens[i],
         )
     fins = []
-    for _ in range(GEN // 2):  # let the first wave make progress
+    for _ in range(max(gen // 2, 1)):  # let the first wave progress
         fins += engine2.step()
     for i in range(n_req // 2, n_req):  # late arrivals, admitted mid-flight
         engine2.submit(
@@ -193,10 +264,10 @@ def run() -> None:
     # dominates. Batched bucketed admission vs per-request baseline on the
     # identical trace (shared weights, same slots/capacity).
     rng = np.random.default_rng(2)
-    ph_n = 8 * BATCH
+    ph_n = (2 if smoke else 8) * batch
     ph_prompts = [
         rng.integers(
-            0, cfg.vocab_size, int(rng.integers(4, 3 * PROMPT_LEN))
+            0, cfg.vocab_size, int(rng.integers(4, 3 * prompt_len))
         ).astype(np.int32)
         for _ in range(ph_n)
     ]
@@ -209,25 +280,25 @@ def run() -> None:
             mesh,
             # 2x slots: admission waves are what this scenario measures
             engine_cfg=EngineConfig(
-                max_slots=2 * BATCH,
+                max_slots=2 * batch,
                 max_len=2 * max_len,
                 max_prefill_batch=batch_cap,
             ),
             params=server.params,
         )
         _warm_buckets(eng, ph_lens)
-        ph[mode] = _measure_trace(eng, ph_prompts, ph_gens)
+        ph[mode] = _measure_trace(eng, ph_prompts, ph_gens, repeats)
 
     payload = {
         "config": {
             "arch": ARCH,
             "smoke": True,
             "sparse": True,
-            "batch": BATCH,
-            "prompt_len": PROMPT_LEN,
-            "gen": GEN,
+            "batch": batch,
+            "prompt_len": prompt_len,
+            "gen": gen,
             "page": cfg.attn_block,
-            "slots": BATCH,
+            "slots": batch,
         },
         "server": {
             "tok_s": round(server_tok_s, 2),
@@ -244,6 +315,7 @@ def run() -> None:
             2,
         ),
         "decode_by_impl": by_impl,
+        "decode_by_sampler": by_sampler,
         "paged_impl_default": base_impl,
         "speedup_vs_server": round(uniform["tok_s"] / server_tok_s, 2),
     }
@@ -275,7 +347,17 @@ def run() -> None:
             f"decode_tok_s={row['decode_tok_s']}"
             f";p95_ms={row['p95_token_latency_ms']}",
         )
+    emit(
+        "serve_engine/decode_sampled",
+        1e6 / max(sampled["decode_tok_s"], 1e-9),
+        f"decode_tok_s={sampled['decode_tok_s']}"
+        f";greedy_tok_s={uniform['decode_tok_s']}"
+        f";sampled_vs_greedy={by_sampler['sampled_vs_greedy']}x",
+    )
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale dry run (tier-1 gate)")
+    run(smoke=ap.parse_args().smoke)

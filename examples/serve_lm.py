@@ -1,35 +1,61 @@
-"""Continuous-batching serving example on a smoke config (CPU).
+"""Continuous-batching serving example with per-request sampling (CPU).
 
 Mixed-length requests flow through ``repro.serving.Engine``: jit'd
 bucketed prefill into the block-paged KV cache, slot-based admission and
-eviction per step, one jit'd decode step over all slots. Two late
-requests are submitted mid-flight to show slots refilling.
+eviction per step, one jit'd decode step over all slots. Each request
+carries its own ``SamplingParams`` — greedy, temperature, top-k/top-p —
+sampled *inside* the jit'd step from the request's own seeded noise
+stream, so the decoding mix costs the same host syncs as all-greedy.
+Two late requests are submitted mid-flight to show slots refilling.
 
-  PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py [--smoke]
 """
+
+import argparse
 
 import numpy as np
 
 from repro.configs import registry
 from repro.launch.mesh import make_local_mesh
-from repro.serving import Engine, EngineConfig
+from repro.serving import Engine, EngineConfig, SamplingParams
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + short requests (the tier-1 dry-run)")
+    args = ap.parse_args(argv)
+
     cfg = registry.get_smoke("smollm-360m", sparse=True)
+    if args.smoke:
+        cfg = cfg.replace(num_layers=2, vocab_size=128)
     engine = Engine(
         cfg,
         make_local_mesh(),
         engine_cfg=EngineConfig(max_slots=3, max_len=128),
     )
     rng = np.random.default_rng(0)
-    for plen, gen in [(16, 12), (9, 6), (24, 10), (5, 8)]:
-        engine.submit(rng.integers(0, cfg.vocab_size, plen), gen)
+    # one greedy request, the rest sampled — each with its own seed
+    samplers = [
+        SamplingParams(),  # greedy
+        SamplingParams(temperature=0.8, top_k=50, seed=1),
+        SamplingParams(temperature=0.7, top_p=0.95, seed=2),
+        SamplingParams(temperature=1.0, repetition_penalty=1.2, seed=3),
+    ]
+    for i, (plen, gen) in enumerate([(16, 12), (9, 6), (24, 10), (5, 8)]):
+        engine.submit(
+            rng.integers(0, cfg.vocab_size, plen), gen,
+            sampling=samplers[i % len(samplers)],
+        )
     finished = []
     for _ in range(6):  # first wave makes progress...
         finished += engine.step()
-    for plen, gen in [(12, 5), (7, 9)]:  # ...then late arrivals join
-        engine.submit(rng.integers(0, cfg.vocab_size, plen), gen)
+    for plen, gen, sp in [  # ...then late arrivals join
+        (12, 5, SamplingParams(temperature=0.9, top_k=20, seed=4)),
+        (7, 9, SamplingParams()),
+    ]:
+        engine.submit(rng.integers(0, cfg.vocab_size, plen), gen,
+                      sampling=sp)
     finished += engine.drain()
 
     for f in sorted(finished, key=lambda f: f.uid):
@@ -44,6 +70,9 @@ def main():
         f"occupancy mean {s['mean_occupancy']} "
         f"(min {s['min_occupancy']}, max {s['max_occupancy']})"
     )
+    print("by sampler:", {
+        k: v["requests"] for k, v in s["by_sampler"].items()
+    })
 
 
 if __name__ == "__main__":

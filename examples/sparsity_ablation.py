@@ -37,15 +37,20 @@ def run_one(density, lowrank_frac, steps):
     return float(np.mean([h["loss"] for h in hist[-5:]])), n
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one sweep cell, 2 steps (the tier-1 dry-run)")
+    args = ap.parse_args(argv)
+    grid = [(0.4, 0.25)] if args.smoke else [
+        (d, f) for d in [0.2, 0.4, 0.8] for f in [0.0, 0.25, 0.5]
+    ]
+    steps = 2 if args.smoke else args.steps
     print("density,lowrank_frac,final_loss,params")
-    for density in [0.2, 0.4, 0.8]:
-        for frac in [0.0, 0.25, 0.5]:
-            loss, n = run_one(density, frac, args.steps)
-            print(f"{density},{frac},{loss:.4f},{n}")
+    for density, frac in grid:
+        loss, n = run_one(density, frac, steps)
+        print(f"{density},{frac},{loss:.4f},{n}")
 
 
 if __name__ == "__main__":

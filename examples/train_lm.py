@@ -6,6 +6,7 @@ train-a-model-for-a-few-hundred-steps example.
 """
 
 import argparse
+import tempfile
 
 from repro.configs import registry
 from repro.launch.mesh import make_local_mesh
@@ -14,15 +15,23 @@ from repro.training.loop import TrainConfig, Trainer
 from repro.training.optimizer import OptConfig
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--dense", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_example_lm")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model, 2 steps (the tier-1 dry-run)")
+    args = ap.parse_args(argv)
 
     cfg = registry.get_smoke("qwen3-1.7b", sparse=not args.dense)
-    data = SyntheticLM(cfg.vocab_size, 128, 8, seed=0)
+    if args.smoke:
+        args.steps = 2
+        args.ckpt_dir = tempfile.mkdtemp(prefix="repro_smoke_lm_")
+        cfg = cfg.replace(num_layers=2, vocab_size=256)
+        data = SyntheticLM(cfg.vocab_size, 32, 4, seed=0)
+    else:
+        data = SyntheticLM(cfg.vocab_size, 128, 8, seed=0)
     trainer = Trainer(
         cfg,
         OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps),

@@ -21,4 +21,10 @@ if [ "$rc" -ne 0 ] && [ "$rc" -ne 5 ]; then
     echo "tier1: test collection failed" >&2
     python -m pytest -q --co "$@" || exit 1
 fi
+# Benchmark-script gate: the serving benchmark's seconds-scale dry run
+# (tiny model, every scenario, JSON to a temp dir). Catches API drift in
+# benchmarks/ that no unit test imports — breakage fails tier 1 here
+# instead of rotting until the next full benchmark run.
+echo "tier1: benchmarks/serve_engine.py --smoke"
+python -m benchmarks.serve_engine --smoke > /dev/null
 exec python -m pytest -q -m "not slow" --durations=10 "$@"

@@ -18,6 +18,7 @@ engine against.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -28,7 +29,7 @@ from repro.configs import registry
 from repro.distributed import sharding
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import transformer as T
-from repro.serving import Engine, EngineConfig
+from repro.serving import Engine, EngineConfig, SamplingParams
 
 
 class Server:
@@ -97,6 +98,20 @@ def main():
     ap.add_argument("--max-prefill-batch", type=int, default=0,
                     help="cap requests per jit'd prefill call (default: "
                          "slots; 1 = per-request admission baseline)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled)")
+    ap.add_argument("--repetition-penalty", type=float, default=1.0,
+                    help="penalty on already-seen tokens (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request b uses seed+b")
+    ap.add_argument("--sampler-candidates", type=int, default=64,
+                    help="static top-C candidate cap for the fused "
+                         "sampler (0 = exact full-vocab; top-k must "
+                         "fit under it)")
     ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
     ap.add_argument("--paged-impl", default=None,
                     choices=["gather", "pallas", "interpret"],
@@ -131,7 +146,20 @@ def main():
     if has_ssm and not args.legacy_server:
         print(f"{args.arch} has SSM layers: using the fixed-batch Server "
               "(paged engine covers attention families)")
+    sp0 = SamplingParams(
+        temperature=args.temperature,
+        top_k=args.top_k,
+        top_p=args.top_p,
+        repetition_penalty=args.repetition_penalty,
+        seed=args.seed,
+    )
     if args.legacy_server or has_ssm:
+        if not sp0.is_plain:
+            raise SystemExit(
+                f"sampler '{sp0.kind}' needs the paged engine (in-jit "
+                "sampling); the reference Server path is plain-greedy "
+                "only"
+            )
         server = Server(cfg, mesh, strategy=args.strategy)
         t0 = time.perf_counter()
         out = server.generate(prompts, args.gen)
@@ -151,12 +179,18 @@ def main():
             max_len=max_len,
             lookahead=args.lookahead or None,
             max_prefill_batch=args.max_prefill_batch,
+            sampler_candidates=args.sampler_candidates,
         ),
         paged_impl=args.paged_impl,
     )
-    print(f"paged decode impl: {engine.paged_impl}")
+    print(f"paged decode impl: {engine.paged_impl}, sampler: {sp0.kind}")
     for b in range(args.batch):
-        engine.submit(prompts[b], args.gen)
+        # each request gets its own noise stream via a distinct seed
+        engine.submit(
+            prompts[b],
+            args.gen,
+            sampling=dataclasses.replace(sp0, seed=args.seed + b),
+        )
     t0 = time.perf_counter()
     finished = engine.drain()
     dt = time.perf_counter() - t0

@@ -441,6 +441,8 @@ def prefill_paged(
     page_rows: jax.Array,
     *,
     impl: str | None = None,
+    sampler: dict | None = None,
+    sampler_candidates: int | None = None,
 ):
     """Batched bucketed prefill into a block-paged KV cache.
 
@@ -456,7 +458,10 @@ def prefill_paged(
     every decode read.
 
     Returns (logits at each request's last real token (N, V), updated
-    paged caches).
+    paged caches) — or, when ``sampler`` is given (the engine's packed
+    per-request sampling params, ``repro.serving.sampling``), the fused
+    first-token sample: (token ids (N,) int32, caches, presence), so the
+    host syncs N ints instead of (N, V) logits.
     """
     x = _inputs_to_x(cfg, params, {"tokens": tokens})
     b, s, _ = x.shape
@@ -478,7 +483,16 @@ def prefill_paged(
             return buf.at[:, page_rows].set(fb.astype(buf.dtype))
 
         new_caches.append(jax.tree.map(scat, pool, fresh))
-    return logits, new_caches
+    if sampler is None:
+        return logits, new_caches
+    # in-function import: repro.serving imports this module at init time
+    from repro.serving import sampling as sampling_lib
+
+    toks, presence = sampling_lib.sample_prefill(
+        logits, tokens, plens, sampler, valid_vocab=cfg.vocab_size,
+        candidates=sampler_candidates,
+    )
+    return toks, new_caches, presence
 
 
 def decode_step(
@@ -517,6 +531,8 @@ def decode_step_paged(
     *,
     impl: str | None = None,
     paged_impl: str | None = None,
+    sampler: dict | None = None,
+    sampler_candidates: int | None = None,
 ):
     """Slot-indexed decode step over a block-paged KV cache.
 
@@ -525,7 +541,11 @@ def decode_step_paged(
     page map. Idle slots pass position 0 with an all-trash page row.
     ``paged_impl`` picks the paged attention read ("gather" jnp reference
     vs the "pallas"/"interpret" page-pool kernel). Returns
-    (logits (B, V), new caches).
+    (logits (B, V), new caches) — or, when ``sampler`` is given, the
+    fused logits->token sample over every slot (ragged occupancy rides
+    along: idle slots' samples are ignored host-side):
+    (token ids (B,) int32, caches, presence). Either way one host sync
+    per step suffices.
     """
     x = L.embed_tokens(cfg, params["embed"], tokens[:, None])
     b = x.shape[0]
@@ -540,4 +560,12 @@ def decode_step_paged(
         paged_impl=paged_impl,
     )
     logits = L.lm_logits(cfg, params["head"], params["embed"], x[:, 0])
-    return logits, new_caches
+    if sampler is None:
+        return logits, new_caches
+    from repro.serving import sampling as sampling_lib
+
+    toks, presence = sampling_lib.sample_decode(
+        logits, sampler, valid_vocab=cfg.vocab_size,
+        candidates=sampler_candidates,
+    )
+    return toks, new_caches, presence

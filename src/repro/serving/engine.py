@@ -29,8 +29,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding
 from repro.models import transformer as T
+from repro.serving import sampling as sampling_lib
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import FinishedRequest, Request, SequenceState
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
 from repro.serving.stats import ServeStats
 
@@ -56,6 +58,7 @@ class EngineConfig:
         lookahead: int | None = None,
         max_prefill_batch: int = 0,
         n_pages: int = 0,
+        sampler_candidates: int = 64,
     ):
         self.max_slots = max_slots
         self.max_len = max_len
@@ -71,6 +74,14 @@ class EngineConfig:
                 f"max_prefill_batch {self.max_prefill_batch} must be in "
                 f"[1, max_slots={max_slots}]"
             )
+        # static candidate cap for the fused sampler: the sampled branch
+        # draws from the top-C logits (lax.top_k, O(V log C)) instead of
+        # full-vocab sorting (O(V log V) — ~100ms/step at 50k vocab).
+        # Requests may not ask for top_k beyond it (Engine.submit
+        # raises). 0 -> uncapped exact full-vocab semantics.
+        self.sampler_candidates = sampler_candidates or None
+        if sampler_candidates < 0:
+            raise ValueError("sampler_candidates must be >= 0")
 
     def rounded(self, page: int) -> "EngineConfig":
         max_len = -(-self.max_len // page) * page
@@ -80,11 +91,19 @@ class EngineConfig:
             lookahead=self.lookahead,
             max_prefill_batch=self.max_prefill_batch,
             n_pages=self.n_pages,
+            sampler_candidates=self.sampler_candidates or 0,
         )
 
 
 def _next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+def _argmax_first(out):
+    """(logits, *rest) -> (argmax token ids, *rest): fuses the greedy
+    pick into the plain jit variants so they, too, sync token ids only."""
+    logits, *rest = out
+    return (jnp.argmax(logits, axis=-1).astype(jnp.int32), *rest)
 
 
 class Engine:
@@ -133,18 +152,67 @@ class Engine:
                     "'gather', 'pallas' or 'interpret'"
                 )
             self.paged_impl = paged_impl
+            # Slot-indexed sampling state. The host-side (slots,) param
+            # rows are written at admission; each step packs them into
+            # device arrays so the sampler runs INSIDE the jit'd step —
+            # the jit returns token ids, and sampled decode keeps the
+            # greedy baseline's single host sync per step. ``presence``
+            # ((slots, V+1) bool, col V absorbs padding) tracks each
+            # slot's prompt+generated tokens for the repetition penalty
+            # and stays device-resident, threaded through both jits.
+            ms = ecfg.max_slots
+            self._samp = {
+                "temp": np.zeros((ms,), np.float32),
+                "top_k": np.zeros((ms,), np.int32),
+                "top_p": np.ones((ms,), np.float32),
+                "rep": np.ones((ms,), np.float32),
+                "key": np.zeros((ms, 2), np.uint32),
+            }
+            # device copy of the packed rows; params change only at
+            # admission, so steady-state sampled decode re-uses the
+            # cached arrays instead of re-transferring 5 arrays a step
+            self._samp_dev: dict | None = None
+            self._presence = jnp.zeros(
+                (ms, cfg.padded_vocab + 1), jnp.bool_
+            )
+            # Two compiled variants per step kind. The *plain* variant
+            # (in-jit argmax, no sampler state — greedy traffic's fast
+            # path, zero sampling overhead) serves steps where no active
+            # request needs noise or the presence buffer; the *sampled*
+            # variant fuses the full sampler. Both decode variants are
+            # warmed at init so neither compiles mid-traffic. Presence
+            # rides as its own (donatable) arg; the small (slots,) param
+            # arrays are re-packed from host each call.
             self._decode = jax.jit(
-                lambda p, c, t, pos, pt: T.decode_step_paged(
-                    cfg, p, c, t, pos, pt, paged_impl=paged_impl
+                lambda p, c, t, pos, pt: _argmax_first(
+                    T.decode_step_paged(
+                        cfg, p, c, t, pos, pt, paged_impl=paged_impl
+                    )
                 ),
                 donate_argnums=(1,),
             )
+            self._decode_sampled = jax.jit(
+                lambda p, c, t, pos, pt, samp, pres: T.decode_step_paged(
+                    cfg, p, c, t, pos, pt, paged_impl=paged_impl,
+                    sampler={**samp, "presence": pres},
+                    sampler_candidates=ecfg.sampler_candidates,
+                ),
+                donate_argnums=(1, 6),
+            )
             # one wrapper; jax.jit specializes per (N, S) bucket shape
             self._prefill = jax.jit(
-                lambda p, t, plens, c, rows: T.prefill_paged(
-                    cfg, p, t, plens, c, rows
+                lambda p, t, plens, c, rows: _argmax_first(
+                    T.prefill_paged(cfg, p, t, plens, c, rows)
                 ),
                 donate_argnums=(3,),
+            )
+            self._prefill_sampled = jax.jit(
+                lambda p, t, plens, c, rows, samp, pres: T.prefill_paged(
+                    cfg, p, t, plens, c, rows,
+                    sampler={**samp, "presence": pres},
+                    sampler_candidates=ecfg.sampler_candidates,
+                ),
+                donate_argnums=(3, 6),
             )
             # One throwaway all-idle decode step (every slot masked to the
             # trash page): compiles the decode program up front AND leaves
@@ -154,12 +222,18 @@ class Engine:
             # pools is compiled a SECOND time at serving time, a
             # multi-hundred-ms hiccup per bucket mid-traffic.
             zeros = jnp.zeros((ecfg.max_slots,), jnp.int32)
+            table0 = jnp.zeros_like(jnp.asarray(self.kv.page_table))
             _, self.kv.buffers = self._decode(
+                self.params, self.kv.buffers, zeros, zeros, table0
+            )
+            _, self.kv.buffers, self._presence = self._decode_sampled(
                 self.params,
                 self.kv.buffers,
                 zeros,
                 zeros,
-                jnp.zeros_like(jnp.asarray(self.kv.page_table)),
+                table0,
+                self._decode_sampler(np.zeros((ms,), np.int32)),
+                self._presence,
             )
         self.scheduler = Scheduler(ecfg.max_slots)
         self.stats = ServeStats()
@@ -169,6 +243,9 @@ class Engine:
         # hand out twice, or an oversubscribed pool would exhaust
         # mid-decode (alloc_upto raises, losing every in-flight request).
         self._page_need: dict[int, int] = {}
+        # slots whose active request needs the sampled step variant
+        # (noise or presence state); empty set -> plain fast path
+        self._fancy_slots: set[int] = set()
         self._uid = 0
         self._step_idx = 0
 
@@ -179,19 +256,77 @@ class Engine:
         max_new_tokens: int,
         *,
         eos_id: int | None = None,
+        sampling: SamplingParams | None = None,
     ) -> int:
-        """Enqueue one request; returns its uid."""
+        """Enqueue one request; returns its uid. ``sampling`` attaches
+        per-request decoding knobs (default: exact greedy)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size > self.ecfg.max_len:
             raise ValueError(
                 f"prompt of {prompt.size} tokens exceeds max_len "
                 f"{self.ecfg.max_len}"
             )
+        cap = self.ecfg.sampler_candidates
+        if (
+            sampling is not None
+            and cap
+            and not sampling.is_greedy  # greedy rows never consult top_k
+            and sampling.top_k > cap
+        ):
+            raise ValueError(
+                f"top_k {sampling.top_k} exceeds the engine's sampler "
+                f"candidate cap {cap} "
+                "(EngineConfig(sampler_candidates=...))"
+            )
         self._uid += 1
         self.scheduler.submit(
-            Request(self._uid, prompt, max_new_tokens, eos_id=eos_id)
+            Request(
+                self._uid,
+                prompt,
+                max_new_tokens,
+                eos_id=eos_id,
+                sampling=sampling or SamplingParams(),
+            )
         )
         return self._uid
+
+    # ---- sampler packing ---------------------------------------------
+    def _bind_sampler(self, slot: int, sp: SamplingParams) -> None:
+        """Write one request's sampling params into its slot's rows.
+        The PRNG base key depends only on the request's seed — never on
+        the slot, step, or co-batched requests — so seeded runs are
+        reproducible under any admission order."""
+        self._samp["temp"][slot] = sp.temperature
+        self._samp["top_k"][slot] = sp.top_k
+        self._samp["top_p"][slot] = sp.top_p
+        self._samp["rep"][slot] = sp.repetition_penalty
+        self._samp["key"][slot] = sampling_lib.base_key_data(sp.seed)
+        self._samp_dev = None  # rows changed: repack at next use
+        if sp.is_plain:
+            self._fancy_slots.discard(slot)
+        else:
+            self._fancy_slots.add(slot)
+
+    def _decode_sampler(self, idx: np.ndarray) -> dict:
+        """Pack the slot-indexed sampling state for one decode step.
+        ``idx`` (slots,) int32: tokens each slot's request has emitted so
+        far (its per-request sample index)."""
+        if self._samp_dev is None:
+            self._samp_dev = {
+                k: jnp.asarray(v) for k, v in self._samp.items()
+            }
+        return {**self._samp_dev, "idx": jnp.asarray(idx)}
+
+    def _prefill_sampler(self, states: list[SequenceState]) -> dict:
+        """Pack per-request sampling params for one admission group
+        (sample index 0: the first emitted token)."""
+        rows = [st_.slot for st_ in states]
+        samp = {
+            k: jnp.asarray(v[rows]) for k, v in self._samp.items()
+        }
+        samp["idx"] = jnp.zeros((len(rows),), jnp.int32)
+        samp["slots"] = jnp.asarray(np.asarray(rows, np.int32))
+        return samp
 
     # ---- prefill -----------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -268,6 +403,7 @@ class Engine:
             state = self.scheduler.admit(self._step_idx, request=req)
             assert state is not None
             self._page_need[state.slot] = self._lifetime_pages(req)
+            self._bind_sampler(state.slot, req.sampling)
             self.kv.alloc_upto(state.slot, state.plen - 1)
             tokens[i, : state.plen] = req.prompt
             plens[i] = state.plen
@@ -275,16 +411,33 @@ class Engine:
             states.append(state)
         t0 = time.perf_counter()
         with self.mesh:
-            logits, self.kv.buffers = self._prefill(
-                self.params,
-                jnp.asarray(tokens),
-                jnp.asarray(plens),
-                self.kv.buffers,
-                jnp.asarray(rows),
-            )
-            toks = np.asarray(
-                jax.block_until_ready(jnp.argmax(logits, axis=-1))
-            )
+            # first token picked inside the jit either way: one host
+            # sync of N ints. A group of plain (greedy, no-penalty)
+            # requests takes the argmax variant and skips all sampler
+            # state; one fancy request in the group switches the whole
+            # group to the fused-sampler variant (its plain peers still
+            # get exact argmax via their temp=0 rows).
+            if any(not r.sampling.is_plain for r in reqs):
+                toks_dev, self.kv.buffers, self._presence = (
+                    self._prefill_sampled(
+                        self.params,
+                        jnp.asarray(tokens),
+                        jnp.asarray(plens),
+                        self.kv.buffers,
+                        jnp.asarray(rows),
+                        self._prefill_sampler(states),
+                        self._presence,
+                    )
+                )
+            else:
+                toks_dev, self.kv.buffers = self._prefill(
+                    self.params,
+                    jnp.asarray(tokens),
+                    jnp.asarray(plens),
+                    self.kv.buffers,
+                    jnp.asarray(rows),
+                )
+            toks = np.asarray(jax.block_until_ready(toks_dev))
         dt = time.perf_counter() - t0
         self.stats.record_prefill(
             int(sum(st_.plen for st_ in states)),
@@ -326,22 +479,39 @@ class Engine:
         if active:
             tokens = np.zeros((self.ecfg.max_slots,), np.int32)
             positions = np.zeros((self.ecfg.max_slots,), np.int32)
+            idx = np.zeros((self.ecfg.max_slots,), np.int32)
             for st_ in active:
                 self.kv.alloc_upto(st_.slot, st_.pos)
                 tokens[st_.slot] = st_.generated[-1]
                 positions[st_.slot] = st_.pos
+                idx[st_.slot] = len(st_.generated)
             t0 = time.perf_counter()
             with self.mesh:
-                logits, self.kv.buffers = self._decode(
-                    self.params,
-                    self.kv.buffers,
-                    jnp.asarray(tokens),
-                    jnp.asarray(positions),
-                    jnp.asarray(self.kv.page_table),
-                )
-                nxt = np.asarray(
-                    jax.block_until_ready(jnp.argmax(logits, axis=-1))
-                )
+                # token picked inside the jit'd step either way: the one
+                # host sync fetches (slots,) ids. All-plain traffic takes
+                # the argmax variant (zero sampling overhead); any fancy
+                # active slot switches the step to the fused sampler.
+                if self._fancy_slots:
+                    toks_dev, self.kv.buffers, self._presence = (
+                        self._decode_sampled(
+                            self.params,
+                            self.kv.buffers,
+                            jnp.asarray(tokens),
+                            jnp.asarray(positions),
+                            jnp.asarray(self.kv.page_table),
+                            self._decode_sampler(idx),
+                            self._presence,
+                        )
+                    )
+                else:
+                    toks_dev, self.kv.buffers = self._decode(
+                        self.params,
+                        self.kv.buffers,
+                        jnp.asarray(tokens),
+                        jnp.asarray(positions),
+                        jnp.asarray(self.kv.page_table),
+                    )
+                nxt = np.asarray(jax.block_until_ready(toks_dev))
             dt = time.perf_counter() - t0
             self.stats.record_decode_step(
                 len(active), self.ecfg.max_slots, dt
@@ -359,10 +529,21 @@ class Engine:
     def _finish(
         self, state: SequenceState, *, reason: str | None = None
     ) -> FinishedRequest:
+        # Early-finish reclamation: pages the lifetime budget reserved
+        # but the sequence never touched (EOS before max_new_tokens) go
+        # straight back to the admission budget — popping the need entry
+        # releases the reservation, freeing the slot returns the
+        # allocated pages — and are counted for the stats.
+        need = self._page_need.pop(state.slot, 0)
+        reclaimed = max(0, need - self.kv.pages_owned(state.slot))
         self.scheduler.evict(state.slot)
         self.kv.free_slot(state.slot)
-        self._page_need.pop(state.slot, None)
-        self.stats.record_finish()
+        self._fancy_slots.discard(state.slot)
+        if reclaimed:
+            self.stats.record_reclaimed(reclaimed)
+        self.stats.record_finish(
+            kind=state.request.sampling.kind, tokens=len(state.generated)
+        )
         if reason is None:
             eos = state.request.eos_id
             reason = (

@@ -11,6 +11,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.serving.sampling import SamplingParams
+
 __all__ = ["Request", "SequenceState", "FinishedRequest"]
 
 
@@ -20,6 +22,10 @@ class Request:
     prompt: np.ndarray  # (plen,) int32, plen >= 1
     max_new_tokens: int
     eos_id: int | None = None
+    # per-request decoding knobs; the default is exact greedy
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams
+    )
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -27,6 +33,10 @@ class Request:
             raise ValueError("prompt must have at least one token")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.sampling is None:
+            self.sampling = SamplingParams()
+        if not isinstance(self.sampling, SamplingParams):
+            raise TypeError("sampling must be a SamplingParams")
 
 
 @dataclasses.dataclass
