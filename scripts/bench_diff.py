@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Per-scenario regression report for BENCH_serve.json trajectories.
+
+Compares the working-tree ``BENCH_serve.json`` against a baseline —
+by default the committed copy (``git show HEAD:BENCH_serve.json``) —
+and prints one table row per tracked metric with the relative change.
+Rows whose metric moved against its preferred direction by more than
+``--threshold`` (default 10%) are flagged.
+
+``scripts/tier1.sh`` runs this after the benchmark smoke as a
+*non-fatal* report line: trajectory drift shows up in every tier-1 run
+without turning benchmark noise into a gate. Exit code is 0 unless
+``--strict`` is given (then flagged regressions exit 1).
+
+  python scripts/bench_diff.py                       # vs HEAD
+  python scripts/bench_diff.py --baseline-ref HEAD~1 # vs an older PR
+  python scripts/bench_diff.py --baseline other.json # vs a file
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+# (label, path into the payload, higher-is-better)
+METRICS = [
+    ("server tok/s", ("server", "tok_s"), True),
+    ("uniform decode tok/s", ("engine_uniform", "decode_tok_s"), True),
+    ("uniform p95 ms", ("engine_uniform", "p95_token_latency_ms"), False),
+    ("mixed wall tok/s", ("engine_mixed", "wall_tok_s"), True),
+    ("prefill-heavy speedup", ("prefill_heavy_speedup",), True),
+    (
+        "decode[gather] tok/s",
+        ("decode_by_impl", "gather", "decode_tok_s"),
+        True,
+    ),
+    (
+        "decode[interpret] tok/s",
+        ("decode_by_impl", "interpret", "decode_tok_s"),
+        True,
+    ),
+    (
+        "decode[pallas] tok/s",
+        ("decode_by_impl", "pallas", "decode_tok_s"),
+        True,
+    ),
+    ("sampled/greedy decode", ("decode_by_sampler", "sampled_vs_greedy"), True),
+    ("prefix admission speedup", ("prefix_cache", "admission_speedup"), True),
+    ("prefix hit rate", ("prefix_cache", "on", "hit_rate"), True),
+]
+
+
+def _dig(payload: dict, path: tuple) -> float | None:
+    node = payload
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node if isinstance(node, (int, float)) else None
+
+
+def _load_baseline(args) -> dict | None:
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                return json.load(f)
+        except OSError as e:
+            print(f"bench_diff: cannot read baseline: {e}", file=sys.stderr)
+            return None
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{args.baseline_ref}:BENCH_serve.json"],
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, OSError, json.JSONDecodeError):
+        print(
+            f"bench_diff: no committed BENCH_serve.json at "
+            f"{args.baseline_ref} (first run?)",
+            file=sys.stderr,
+        )
+        return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_serve.json")
+    ap.add_argument(
+        "--baseline", default=None, help="baseline json file (overrides git)"
+    )
+    ap.add_argument(
+        "--baseline-ref", default="HEAD", help="git ref for the baseline"
+    )
+    ap.add_argument("--threshold", type=float, default=0.10)
+    ap.add_argument(
+        "--strict", action="store_true", help="exit 1 on flagged regressions"
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+    except OSError as e:
+        print(f"bench_diff: cannot read {args.current}: {e}", file=sys.stderr)
+        return 0
+    base = _load_baseline(args)
+    if base is None:
+        return 0
+
+    rows, flagged = [], 0
+    for label, path, higher in METRICS:
+        b, c = _dig(base, path), _dig(cur, path)
+        if b is None and c is None:
+            continue
+        if b is None or c is None:
+            # a tracked trajectory vanishing IS a regression — flag it
+            # so --strict gates it; a metric new in this PR is fine
+            if c is None:
+                flagged += 1
+            rows.append((label, b, c, "", "new" if b is None else "GONE"))
+            continue
+        rel = (c - b) / abs(b) if b else 0.0
+        worse = -rel if higher else rel
+        flag = "REGRESSION" if worse > args.threshold else ""
+        flagged += bool(flag)
+        rows.append((label, b, c, f"{rel:+.1%}", flag))
+
+    w = max(len(r[0]) for r in rows) if rows else 0
+    fmt = "%s%-*s  %10s  %10s  %8s  %s"
+
+    def num(x):
+        return "-" if x is None else f"{x:g}"
+
+    print(f"bench_diff: BENCH_serve.json vs {args.baseline or args.baseline_ref}")
+    print(fmt % ("  ", w, "metric", "baseline", "current", "delta", ""))
+    for label, b, c, d, flag in rows:
+        print(fmt % ("  ", w, label, num(b), num(c), d, flag))
+    if flagged:
+        print(
+            f"bench_diff: {flagged} metric(s) regressed > "
+            f"{args.threshold:.0%}"
+        )
+    return 1 if (flagged and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,4 +27,9 @@ fi
 # instead of rotting until the next full benchmark run.
 echo "tier1: benchmarks/serve_engine.py --smoke"
 python -m benchmarks.serve_engine --smoke > /dev/null
+# Trajectory report (non-fatal): how the tracked BENCH_serve.json
+# numbers moved vs the committed baseline. Pure reporting — benchmark
+# noise must not gate tier 1; scripts/bench_diff.py --strict exists for
+# CI jobs that do want a hard gate.
+python scripts/bench_diff.py || true
 exec python -m pytest -q -m "not slow" --durations=10 "$@"

@@ -112,6 +112,19 @@ def main():
                     help="static top-C candidate cap for the fused "
                          "sampler (0 = exact full-vocab; top-k must "
                          "fit under it)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prompt-prefix reuse: admission maps "
+                         "cached prefix pages into the new slot and "
+                         "prefills only the uncached suffix")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="first N tokens of every synthetic prompt are "
+                         "a common system prompt (demos --prefix-cache "
+                         "hits; 0 = fully independent prompts)")
+    ap.add_argument("--max-skips", type=int, default=64,
+                    help="anti-starvation: after this many passes of "
+                         "being admitted around, a waiting request "
+                         "blocks later admissions until it fits "
+                         "(0 disables aging)")
     ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
     ap.add_argument("--paged-impl", default=None,
                     choices=["gather", "pallas", "interpret"],
@@ -139,6 +152,9 @@ def main():
     prompts = rng.integers(
         0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32
     )
+    if args.shared_prefix:
+        n = min(args.shared_prefix, args.prompt_len)
+        prompts[:, :n] = prompts[0, :n]  # one system prompt for everyone
 
     # the paged cache covers attention families; SSM/hybrid state is
     # slot-indexed, not paged — serve those through the reference path
@@ -180,6 +196,8 @@ def main():
             lookahead=args.lookahead or None,
             max_prefill_batch=args.max_prefill_batch,
             sampler_candidates=args.sampler_candidates,
+            max_skips=args.max_skips,
+            prefix_cache=args.prefix_cache,
         ),
         paged_impl=args.paged_impl,
     )
@@ -205,6 +223,15 @@ def main():
         f"occupancy {s['mean_occupancy']:.2f}, "
         f"{s['mean_prefill_batch']:.1f} req/prefill)"
     )
+    if args.prefix_cache:
+        pc = s["prefix_cache"]
+        print(
+            f"prefix cache: {pc['hit_rate']:.0%} hit rate "
+            f"({pc['hit_tokens']}/{pc['prompt_tokens']} prompt tokens, "
+            f"{pc['hit_pages']} shared pages, "
+            f"{pc['inserted_pages']} indexed, {pc['evicted_pages']} "
+            f"evicted, {pc['cow_copies']} COW)"
+        )
     grid = np.stack(
         [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
     )

@@ -167,47 +167,30 @@ def _grouped_out(p: jax.Array, v: jax.Array) -> jax.Array:
     )
 
 
-def flash_attention_jnp(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    *,
-    causal: bool,
-    chunk: int,
-    sm_scale: float,
-) -> jax.Array:
-    """Memory-efficient causal attention: lax.scan over KV chunks with
-    online softmax. q (B,Sq,Hk,G,D); k, v (B,Sk,Hk,D). Never materializes
-    the (Sq, Sk) score matrix. ``Sk`` need not be a chunk multiple: KV is
-    zero-padded to one and the padded keys masked out.
-    """
-    b, sq, hk, g, d = q.shape
-    sk_real = sk = k.shape[1]
-    chunk = min(chunk, sk)
-    pad = (-sk) % chunk  # KV need not be a chunk multiple: pad and mask
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        sk += pad
-    n_chunks = sk // chunk
-    q32 = q.astype(jnp.float32) * sm_scale
+def _online_softmax_scan(q32, out_dtype, k, v, chunk, mask_fn) -> jax.Array:
+    """Shared online-softmax attention core: lax.scan over KV chunks,
+    never materializing the (Sq, Sk) score matrix.
 
+    q32 (B,Sq,Hk,G,D) fp32 with ``sm_scale`` already folded in; k, v
+    (B,Sk,Hk,D) with Sk a ``chunk`` multiple; ``mask_fn(ci)`` returns a
+    bool mask broadcastable to the (B,Hk,G,Sq,chunk) scores of chunk
+    ``ci`` (False = masked out), or None for no masking. Both the dense
+    causal path and the prefix partial-prefill path run this exact body,
+    so a numerics fix lands in every caller at once.
+    """
+    b, sq, hk, g, d = q32.shape
+    n_chunks = k.shape[1] // chunk
     kc = k.reshape(b, n_chunks, chunk, hk, d)
     vc = v.reshape(b, n_chunks, chunk, hk, d)
-    qpos = jnp.arange(sq)
 
     @jax.checkpoint
     def body(carry, inputs):
         m, l, acc = carry
         ci, kb, vb = inputs
-        s = _grouped_logits(q32.astype(q.dtype), kb).astype(jnp.float32)
-        s = s * 1.0  # already scaled via q32? keep q dtype path simple
-        if causal or pad:
-            kpos = ci * chunk + jnp.arange(chunk)
-            mask = jnp.broadcast_to(kpos[None, :] < sk_real, (sq, chunk))
-            if causal:
-                mask = mask & (kpos[None, :] <= qpos[:, None])
-            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        s = _grouped_logits(q32.astype(out_dtype), kb).astype(jnp.float32)
+        mask = mask_fn(ci)
+        if mask is not None:
+            s = jnp.where(mask, s, -jnp.inf)
         m_new = jnp.maximum(m, s.max(axis=-1))
         masked = jnp.isneginf(m_new)
         alpha = jnp.where(masked, 1.0, jnp.exp(m - m_new))
@@ -231,7 +214,43 @@ def flash_attention_jnp(
     )
     l = jnp.where(l == 0.0, 1.0, l)
     out = acc / l[..., None]  # (b,hk,g,sq,d)
-    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).astype(out_dtype)
+
+
+def flash_attention_jnp(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    chunk: int,
+    sm_scale: float,
+) -> jax.Array:
+    """Memory-efficient causal attention: lax.scan over KV chunks with
+    online softmax. q (B,Sq,Hk,G,D); k, v (B,Sk,Hk,D). Never materializes
+    the (Sq, Sk) score matrix. ``Sk`` need not be a chunk multiple: KV is
+    zero-padded to one and the padded keys masked out.
+    """
+    sq = q.shape[1]
+    sk_real = sk = k.shape[1]
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk  # KV need not be a chunk multiple: pad and mask
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q32 = q.astype(jnp.float32) * sm_scale
+    qpos = jnp.arange(sq)
+
+    def mask_fn(ci):
+        if not (causal or pad):
+            return None
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.broadcast_to(kpos[None, :] < sk_real, (sq, chunk))
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        return mask[None, None, None]
+
+    return _online_softmax_scan(q32, q.dtype, k, v, chunk, mask_fn)
 
 
 # NOTE on scaling: q32 above holds q * sm_scale in fp32; _grouped_logits is
@@ -299,6 +318,114 @@ def sparse_attention_jnp(
         preferred_element_type=jnp.float32,
     ).astype(q.dtype)
     return out.reshape(b, sq, hk, g, d)
+
+
+def _pixelfly_visible(
+    qpos: jax.Array,
+    kpos: jax.Array,
+    *,
+    block: int,
+    local_blocks: int,
+    global_blocks: int,
+    max_stride: int,
+) -> jax.Array:
+    """Elementwise causal pixelfly visibility by *absolute* positions.
+
+    Exactly the causal-visible entries of
+    ``attn_pattern.pixelfly_attention_block_mask`` on a power-of-two
+    block grid: local window, global cross, and the butterfly strides
+    (``qb ^ kb`` a power of two below the stride cap). Causal-visible
+    entries never depend on the total block count — the stretched-grid
+    construction only moves entries above the diagonal — so this rule is
+    bucket-size invariant and a cached prefix sees the same mask its
+    donor prefill used."""
+    qb = qpos // block
+    kb = kpos // block
+    diff = qb ^ kb
+    stride = (diff > 0) & ((diff & (diff - 1)) == 0)
+    if max_stride:
+        from repro.core.butterfly import next_pow2
+
+        stride &= diff < next_pow2(max_stride)
+    vis = (
+        (kb < global_blocks)
+        | (qb < global_blocks)
+        | ((qb >= kb) & (qb - kb < local_blocks))
+        | stride
+    )
+    return vis & (kpos <= qpos)
+
+
+def prefix_flash_attention_jnp(
+    q: jax.Array,
+    k_suf: jax.Array,
+    v_suf: jax.Array,
+    k_pre: jax.Array,
+    v_pre: jax.Array,
+    prefix_len: jax.Array,
+    *,
+    sm_scale: float,
+    chunk: int,
+    block_cfg: tuple[int, int, int, int] | None = None,
+) -> jax.Array:
+    """Partial-prefill attention: suffix queries over [prefix ; suffix].
+
+    q (B,Sq,Hk,G,D) are the *uncached suffix* queries, sitting at
+    absolute positions ``prefix_len[b] + i``; k_suf/v_suf (B,Sq,Hk,D)
+    their keys; k_pre/v_pre (B,Lp,Hk,D) the cached prefix K/V gathered
+    through the page table (rows valid where j < prefix_len[b] — the
+    rest is trash-page padding). One lax.scan over concatenated KV
+    chunks with online softmax, like ``flash_attention_jnp`` but with
+    per-row masks (prefix validity + causal on absolute positions).
+
+    ``block_cfg`` = (block, local_blocks, global_blocks, max_stride)
+    applies the elementwise pixelfly causal mask (``_pixelfly_visible``)
+    so a sparse-attention model's partial prefill matches its full
+    prefill; requires ``prefix_len`` to be block-aligned. None = dense
+    causal.
+    """
+    sq = q.shape[1]
+    lp = k_pre.shape[1]
+    k = jnp.concatenate([k_pre.astype(k_suf.dtype), k_suf], axis=1)
+    v = jnp.concatenate([v_pre.astype(v_suf.dtype), v_suf], axis=1)
+    sk = lp + sq
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q32 = q.astype(jnp.float32) * sm_scale
+    qpos = prefix_len[:, None] + jnp.arange(sq)[None, :]  # (B, Sq) abs
+
+    def mask_fn(ci):
+        j = ci * chunk + jnp.arange(chunk)  # flat [prefix ; suffix] index
+        is_pre = j[None, :] < lp
+        # absolute key positions: prefix token j sits at j, suffix token
+        # j - lp at prefix_len + (j - lp); padded tails land beyond every
+        # query position and die to the causal mask
+        kpos = jnp.where(
+            is_pre, j[None, :], prefix_len[:, None] + (j[None, :] - lp)
+        )  # (B, chunk)
+        valid = jnp.where(
+            is_pre, j[None, :] < prefix_len[:, None], j[None, :] < sk
+        )
+        mask = (
+            valid[:, None, :]
+            & (kpos[:, None, :] <= qpos[:, :, None])
+        )  # (B, Sq, chunk)
+        if block_cfg is not None:
+            blk, loc, glo, stride = block_cfg
+            mask &= _pixelfly_visible(
+                qpos[:, :, None],
+                kpos[:, None, :],
+                block=blk,
+                local_blocks=loc,
+                global_blocks=glo,
+                max_stride=stride,
+            )
+        return mask[:, None, None]
+
+    return _online_softmax_scan(q32, q.dtype, k, v, chunk, mask_fn)
 
 
 def decode_attention_jnp(
@@ -639,7 +766,7 @@ def apply_attention(
     q = apply_rope(q, positions, c.rope_theta, c.mrope_sections)
     k = apply_rope(k, positions, c.rope_theta, c.mrope_sections)
     qg = q.reshape(b, s, hk, g, d)
-    if mode in ("train", "prefill"):
+    if mode in ("train", "prefill", "prefill_prefix"):
         aspec = _attn_activation_specs(c, s)
         if aspec is not None:
             qg = constrain(c, qg, *aspec["q"])
@@ -647,7 +774,44 @@ def apply_attention(
             v = constrain(c, v, *aspec["kv"])
 
     new_cache = cache
-    if mode in ("decode_paged", "decode_paged_sparse"):
+    if mode == "prefill_prefix":
+        # Cache-aware partial prefill: ``cache`` holds the slot-shared
+        # page pools, ``page_table`` (B, P_pre) the *cached prefix*
+        # pages, ``pos`` (B,) the per-request prefix lengths (page
+        # multiples; 0 for misses). Suffix queries attend the gathered
+        # full-prefix keys plus their own causal window; the fresh
+        # suffix K/V is returned for the caller's page scatter, the
+        # shared prefix pages are read-only.
+        assert cache is not None and pos is not None and page_table is not None
+        page = cache["k"].shape[1]
+        npre = page_table.shape[1]
+        kp = jnp.take(cache["k"], page_table, axis=0).reshape(
+            b, npre * page, hk, d
+        )
+        vp = jnp.take(cache["v"], page_table, axis=0).reshape(
+            b, npre * page, hk, d
+        )
+        block_cfg = (
+            (
+                c.attn_block,
+                c.attn_local_blocks,
+                c.attn_global_blocks,
+                c.attn_max_stride,
+            )
+            if c.sparse_attention
+            and s >= c.attn_block
+            and s % c.attn_block == 0
+            else None
+        )
+        o = prefix_flash_attention_jnp(
+            qg, k, v, kp, vp, pos,
+            sm_scale=scale, chunk=c.attn_chunk, block_cfg=block_cfg,
+        )
+        new_cache = {"k": k, "v": v}
+        aspec = _attn_activation_specs(c, s)
+        if aspec is not None:
+            o = constrain(c, o, *aspec["o"])
+    elif mode in ("decode_paged", "decode_paged_sparse"):
         assert cache is not None and pos is not None and page_table is not None
         page = cache["k"].shape[1]
         # write-at-position: each slot's token lands in its own page; idle

@@ -440,6 +440,10 @@ def prefill_paged(
     caches: list,
     page_rows: jax.Array,
     *,
+    prefix_rows: jax.Array | None = None,
+    prefix_lens: jax.Array | None = None,
+    full_tokens: jax.Array | None = None,
+    full_plens: jax.Array | None = None,
     impl: str | None = None,
     sampler: dict | None = None,
     sampler_candidates: int | None = None,
@@ -457,6 +461,18 @@ def prefill_paged(
     positions land beyond ``plen`` in logical order and are masked by
     every decode read.
 
+    Cache-aware *partial* prefill (prefix cache hits): when
+    ``prefix_lens`` (N,) is given, ``tokens``/``plens`` carry only each
+    request's *uncached suffix* (page-aligned — hits cover full pages)
+    and ``prefix_rows`` (N, P_pre) the physical pages already holding
+    its prefix K/V (trash-padded past the real prefix). Suffix queries
+    run at absolute positions ``prefix_len + i`` and attend the full
+    prefix through the page table (``apply_attention`` mode
+    ``prefill_prefix``); only suffix K/V is computed and scattered —
+    shared prefix pages are never written. ``full_tokens``/``full_plens``
+    (the whole prompt, any bucket) seed the sampler's presence buffer,
+    which must cover cached prefix tokens too.
+
     Returns (logits at each request's last real token (N, V), updated
     paged caches) — or, when ``sampler`` is given (the engine's packed
     per-request sampling params, ``repro.serving.sampling``), the fused
@@ -465,8 +481,22 @@ def prefill_paged(
     """
     x = _inputs_to_x(cfg, params, {"tokens": tokens})
     b, s, _ = x.shape
-    positions = _positions(cfg, {}, b, s)
-    x, kv, _ = _backbone(cfg, params, x, positions, mode="prefill", impl=impl)
+    if prefix_lens is None:
+        positions = _positions(cfg, {}, b, s)
+        x, kv, _ = _backbone(
+            cfg, params, x, positions, mode="prefill", impl=impl
+        )
+    else:
+        positions = prefix_lens[:, None] + jnp.arange(s)[None, :]
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(
+                positions[..., None], (b, s, len(cfg.mrope_sections))
+            )
+        x, kv, _ = _backbone(
+            cfg, params, x, positions, mode="prefill_prefix",
+            caches=caches, pos=prefix_lens, page_table=prefix_rows,
+            impl=impl,
+        )
     # (N, d) hidden state at each request's last *real* prompt token
     xe = jnp.take_along_axis(x, (plens - 1)[:, None, None], axis=1)[:, 0]
     logits = L.lm_logits(cfg, params["head"], params["embed"], xe)
@@ -488,8 +518,12 @@ def prefill_paged(
     # in-function import: repro.serving imports this module at init time
     from repro.serving import sampling as sampling_lib
 
+    # partial prefill: presence must be seeded from the WHOLE prompt
+    # (cached prefix included), not just the suffix this call computed
+    ptoks = tokens if full_tokens is None else full_tokens
+    pplens = plens if full_plens is None else full_plens
     toks, presence = sampling_lib.sample_prefill(
-        logits, tokens, plens, sampler, valid_vocab=cfg.vocab_size,
+        logits, ptoks, pplens, sampler, valid_vocab=cfg.vocab_size,
         candidates=sampler_candidates,
     )
     return toks, new_caches, presence

@@ -14,6 +14,7 @@ pages its local/butterfly/global schedule visits.
 
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix import PrefixCache
 from repro.serving.request import FinishedRequest, Request, SequenceState
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
@@ -23,6 +24,7 @@ __all__ = [
     "Engine",
     "EngineConfig",
     "PagedKVCache",
+    "PrefixCache",
     "Request",
     "SamplingParams",
     "SequenceState",

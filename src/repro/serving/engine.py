@@ -31,6 +31,7 @@ from repro.distributed import sharding
 from repro.models import transformer as T
 from repro.serving import sampling as sampling_lib
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix import PrefixCache, PrefixStats
 from repro.serving.request import FinishedRequest, Request, SequenceState
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
@@ -44,11 +45,17 @@ class EngineConfig:
     ``max_len`` tokens of page-granular KV capacity. ``lookahead`` bounds
     how many waiting requests one admission pass may inspect (default
     ``2 * max_slots``): within that window smaller requests may be
-    admitted past an oversized head-of-queue one (no aging — the big
-    request waits until slots/pages fit it). ``max_prefill_batch``
+    admitted past an oversized head-of-queue one. ``max_prefill_batch``
     caps how many same-bucket requests share one jit'd prefill call
     (0 -> ``max_slots``; 1 reproduces per-request admission, kept as the
-    benchmark baseline)."""
+    benchmark baseline). ``max_skips`` bounds starvation: a waiting
+    request that ``max_skips`` admission passes have admitted *around*
+    (lookahead picked later, smaller requests over it) becomes a
+    barrier — nothing behind it is admitted until it fits (0 disables
+    aging). ``prefix_cache`` turns on radix-tree prefix reuse: admission
+    maps cached prompt-prefix pages straight into the new slot's page
+    table and prefills only the uncached suffix
+    (``repro.serving.prefix``)."""
 
     def __init__(
         self,
@@ -59,6 +66,8 @@ class EngineConfig:
         max_prefill_batch: int = 0,
         n_pages: int = 0,
         sampler_candidates: int = 64,
+        max_skips: int = 64,
+        prefix_cache: bool = False,
     ):
         self.max_slots = max_slots
         self.max_len = max_len
@@ -68,6 +77,10 @@ class EngineConfig:
         )
         if self.lookahead < 1:
             raise ValueError("lookahead must be >= 1")
+        if max_skips < 0:
+            raise ValueError("max_skips must be >= 0 (0 disables aging)")
+        self.max_skips = max_skips
+        self.prefix_cache = prefix_cache
         self.max_prefill_batch = max_prefill_batch or max_slots
         if not 1 <= self.max_prefill_batch <= max_slots:
             raise ValueError(
@@ -92,6 +105,8 @@ class EngineConfig:
             max_prefill_batch=self.max_prefill_batch,
             n_pages=self.n_pages,
             sampler_candidates=self.sampler_candidates or 0,
+            max_skips=self.max_skips,
+            prefix_cache=self.prefix_cache,
         )
 
 
@@ -214,6 +229,32 @@ class Engine:
                 ),
                 donate_argnums=(3, 6),
             )
+            # cache-aware partial-prefill variants: tokens/plens carry
+            # only the uncached suffix, (pre_rows, pre_lens) map the
+            # shared prefix pages in. Specialized per (N, S_suffix,
+            # P_prefix) bucket; miss-only groups take the plain
+            # variants above, so cache-off traffic compiles nothing new.
+            self._prefill_pre = jax.jit(
+                lambda p, t, plens, c, rows, prow, plen_pre: _argmax_first(
+                    T.prefill_paged(
+                        cfg, p, t, plens, c, rows,
+                        prefix_rows=prow, prefix_lens=plen_pre,
+                    )
+                ),
+                donate_argnums=(3,),
+            )
+            self._prefill_pre_sampled = jax.jit(
+                lambda p, t, plens, c, rows, prow, plen_pre, ft, fl, samp, pres: (
+                    T.prefill_paged(
+                        cfg, p, t, plens, c, rows,
+                        prefix_rows=prow, prefix_lens=plen_pre,
+                        full_tokens=ft, full_plens=fl,
+                        sampler={**samp, "presence": pres},
+                        sampler_candidates=ecfg.sampler_candidates,
+                    )
+                ),
+                donate_argnums=(3, 10),
+            )
             # One throwaway all-idle decode step (every slot masked to the
             # trash page): compiles the decode program up front AND leaves
             # the pools with the aval/layout the decode step produces —
@@ -237,6 +278,10 @@ class Engine:
             )
         self.scheduler = Scheduler(ecfg.max_slots)
         self.stats = ServeStats()
+        # radix-tree prefix cache: parked pages reuse free pool space
+        # opportunistically and are evicted (LRU) the moment the
+        # allocator wants them back — admission is never blocked
+        self._prefix = PrefixCache(self.kv) if ecfg.prefix_cache else None
         # slot -> total pages its sequence may ever need (prompt + decode
         # growth). Only pages_for_len(plen) are allocated at admission;
         # the remainder is a *reservation* the admission budget must not
@@ -265,6 +310,16 @@ class Engine:
             raise ValueError(
                 f"prompt of {prompt.size} tokens exceeds max_len "
                 f"{self.ecfg.max_len}"
+            )
+        lifetime = self.kv.pages_for_len(
+            min(prompt.size + max_new_tokens - 1, self.ecfg.max_len)
+        )
+        if lifetime > self.kv.n_pages - 1:
+            # reject what could never admit: with aging on, an
+            # impossible request would eventually barrier the queue
+            raise ValueError(
+                f"request needs {lifetime} lifetime pages but the pool "
+                f"has {self.kv.n_pages - 1} (EngineConfig(n_pages=...))"
             )
         cap = self.ecfg.sampler_candidates
         if (
@@ -343,6 +398,14 @@ class Engine:
         O(log slots * log lengths) prefill programs total."""
         return min(_next_pow2(n), self.ecfg.max_slots)
 
+    def _pre_bucket(self, n_pages: int) -> int:
+        """Pad prefix-hit page counts to powers of two: partial-prefill
+        programs stay O(log) per axis like every other bucket (0 = miss
+        -> the plain non-prefix program)."""
+        if n_pages == 0:
+            return 0
+        return min(_next_pow2(n_pages), self.kv.pages_per_seq)
+
     def _lifetime_pages(self, req) -> int:
         """Worst-case pages a request can ever touch, capped at slot
         capacity. The last generated token is returned but never written
@@ -352,6 +415,37 @@ class Engine:
             min(req.prompt.size + req.max_new_tokens - 1, self.ecfg.max_len)
         )
 
+    def _alloc(self, slot: int, pos: int) -> None:
+        """Grow ``slot`` to cover ``pos``, evicting LRU parked prefix
+        pages into the free list first if the allocator would otherwise
+        run dry — parked pages are opportunistic and never block a live
+        sequence."""
+        if self._prefix is not None:
+            need = pos // self.kv.page + 1 - self.kv.pages_owned(slot)
+            if need > self.kv.free_pages:
+                self._prefix.ensure_free(need)
+        self.kv.alloc_upto(slot, pos)
+
+    def _ensure_writable(self, slot: int, pos: int) -> None:
+        """Copy-on-write guard: a slot must exclusively own the page its
+        next token writes into. A shared page (mapped into another slot)
+        or a radix-indexed page (its bytes are the tree key's value —
+        writing would corrupt future hits) is first replaced by a fresh
+        page with a jit'd device-side copy. Page-granular prefix hits
+        only ever share *full* pages behind the write position, so this
+        fires on future sub-page matching or sequence forking — it is
+        the invariant, not a hot path."""
+        if self._prefix is None:
+            return
+        li = pos // self.kv.page
+        if li >= self.kv.pages_owned(slot):
+            return
+        p = int(self.kv.page_table[slot, li])
+        if self.kv.refcount(p) > 1 or self._prefix.page_in_tree(p):
+            self._prefix.ensure_free(1)
+            self.kv.cow_page(slot, li, keep=self._prefix.page_in_tree)
+            self.stats.record_cow()
+
     def _reserved_pages(self) -> int:
         """Pages promised to active sequences for decode growth but not
         yet allocated."""
@@ -360,36 +454,99 @@ class Engine:
             for slot, need in self._page_need.items()
         )
 
-    def _plan_admission(self) -> dict[int, list]:
+    def _match_and_pin(self, req) -> tuple[list[int], int]:
+        """Walk the radix tree for ``req``'s prompt and pin every hit
+        page (parked pages become live, live pages gain a reference), so
+        nothing this plan relies on can be evicted or freed before the
+        admission lands. Returns (pinned pages, admission cost in
+        pages): fresh pages the request still needs, plus the parked
+        pages the pin just consumed from the evictable budget."""
+        if self._prefix is None:
+            return [], self._lifetime_pages(req)
+        pages = self._prefix.match(req.prompt)
+        parked = 0
+        for p in pages:
+            if self.kv.is_cached(p):
+                self.kv.take_cached(p)
+                parked += 1
+            else:
+                self.kv.incref(p)
+        return pages, self._lifetime_pages(req) - len(pages) + parked
+
+    def _unpin(self, pages: list[int]) -> None:
+        for p in pages:
+            self.kv.unpin(p)
+
+    def _plan_admission(self) -> dict[tuple[int, int], list]:
         """One bounded-lookahead pass over the waiting queue: group the
         first ``lookahead`` requests into same-bucket prefill waves that
         fit the current slot and page budget. A request whose pages don't
         fit is *skipped* (not blocking): later, smaller requests in the
-        window may still be admitted this step. The budget covers each
-        request's whole lifetime (prompt + decode growth), so admission
-        can never oversubscribe into a mid-decode out-of-pages crash."""
-        groups: dict[int, list] = {}
+        window may still be admitted this step — unless the skipped
+        request has already been admitted around ``max_skips`` times, in
+        which case the pass stops at it (anti-starvation barrier). The
+        budget covers each request's whole lifetime (prompt + decode
+        growth), so admission can never oversubscribe into a mid-decode
+        out-of-pages crash; with the prefix cache on it counts only
+        *uncached* pages (hit pages are shared, parked pages are already
+        resident) plus every parked page as evictable headroom.
+
+        Groups are keyed ``(suffix bucket, prefix-page bucket)``; each
+        entry carries ``(req, pinned prefix pages)``."""
+        groups: dict[tuple[int, int], list] = {}
         free_slots = self.scheduler.num_free_slots
         if free_slots == 0:
             return groups
         budget = self.kv.free_pages - self._reserved_pages()
-        for req in self.scheduler.peek_admissible(self.ecfg.lookahead):
+        if self._prefix is not None:
+            budget += self._prefix.evictable_pages()
+        skipped: list[tuple[int, Request]] = []
+        last_planned = -1
+        for wi, req in enumerate(
+            self.scheduler.peek_admissible(self.ecfg.lookahead)
+        ):
             if free_slots == 0:
                 break
-            need = self._lifetime_pages(req)
-            if need > budget:
-                continue  # admit once pages free up; try the next one
-            groups.setdefault(self._bucket(req.prompt.size), []).append(req)
+            pages, cost = self._match_and_pin(req)
+            if cost > budget:
+                self._unpin(pages)
+                skipped.append((wi, req))
+                if (
+                    self.ecfg.max_skips
+                    and self.scheduler.skip_count(req) >= self.ecfg.max_skips
+                ):
+                    break  # starved request: stop admitting around it
+                continue
+            suffix = req.prompt.size - len(pages) * self.kv.page
+            key = (self._bucket(suffix), self._pre_bucket(len(pages)))
+            groups.setdefault(key, []).append((req, pages))
             free_slots -= 1
-            budget -= need
+            budget -= cost
+            last_planned = wi
+        # a request ages only when this pass admitted *around* it
+        # (someone behind it in the window got a slot)
+        self.scheduler.note_skips(
+            [req for wi, req in skipped if wi < last_planned]
+        )
         return groups
 
-    def _admit_group(self, reqs: list, s: int) -> list[SequenceState]:
+    def _admit_group(
+        self, plans: list, s: int, npre: int
+    ) -> list[SequenceState]:
         """Admit one same-bucket group: ONE jit'd ``prefill_paged`` call
         over tokens (N, S) and ONE host sync for all N requests. Page
         allocation is trimmed to each real prompt — bucket-padding keys
-        scatter to the trash page."""
-        nb = len(reqs)
+        scatter to the trash page.
+
+        ``plans`` carries ``(req, pinned prefix pages)`` pairs sharing
+        the ``(S suffix, npre prefix-page)`` bucket: hit pages are
+        adopted straight into the slot's page table (the plan's pin
+        becomes the slot's reference) and only the uncached suffix is
+        prefilled, attending the prefix through the page table. The hit
+        pages are re-indexed in the radix tree only *after* the call's
+        host sync — a same-wave duplicate prompt must never read pages
+        its own program is still writing."""
+        nb = len(plans)
         # step()'s greedy chunking hands over exact power-of-two groups,
         # so every call fills its compiled (N, S) program — no batch rows
         # are ever padded
@@ -398,16 +555,35 @@ class Engine:
         tokens = np.zeros((nb, s), np.int32)
         plens = np.empty((nb,), np.int32)
         rows = np.zeros((nb, n_pages), np.int32)
+        pre_rows = np.zeros((nb, max(npre, 1)), np.int32)
+        pre_lens = np.zeros((nb,), np.int32)
+        # full prompts ride along only for the sampled variant's
+        # presence seeding (cached prefix tokens count for the
+        # repetition penalty); shape is static per group bucket
+        full_tokens = np.zeros((nb, npre * self.kv.page + s), np.int32)
+        full_plens = np.empty((nb,), np.int32)
         states: list[SequenceState] = []
-        for i, req in enumerate(reqs):
+        for i, (req, pages) in enumerate(plans):
             state = self.scheduler.admit(self._step_idx, request=req)
             assert state is not None
+            hit = len(pages) * self.kv.page
+            state.prefix_hit_tokens = hit
             self._page_need[state.slot] = self._lifetime_pages(req)
             self._bind_sampler(state.slot, req.sampling)
-            self.kv.alloc_upto(state.slot, state.plen - 1)
-            tokens[i, : state.plen] = req.prompt
-            plens[i] = state.plen
-            rows[i] = self.kv.bucket_row(state.slot, state.plen, n_pages)
+            if pages:
+                self.kv.adopt(state.slot, pages)
+            self._alloc(state.slot, state.plen - 1)
+            suffix = req.prompt[hit:]
+            tokens[i, : suffix.size] = suffix
+            plens[i] = suffix.size
+            rows[i] = self.kv.suffix_row(
+                state.slot, len(pages), state.plen, n_pages
+            )
+            pre_rows[i, : len(pages)] = pages
+            pre_lens[i] = hit
+            full_tokens[i, : state.plen] = req.prompt
+            full_plens[i] = state.plen
+            self.stats.record_prefix_lookup(hit, state.plen, len(pages))
             states.append(state)
         t0 = time.perf_counter()
         with self.mesh:
@@ -416,8 +592,37 @@ class Engine:
             # requests takes the argmax variant and skips all sampler
             # state; one fancy request in the group switches the whole
             # group to the fused-sampler variant (its plain peers still
-            # get exact argmax via their temp=0 rows).
-            if any(not r.sampling.is_plain for r in reqs):
+            # get exact argmax via their temp=0 rows). Miss-only groups
+            # (npre == 0) take the plain non-prefix programs — identical
+            # to cache-off serving.
+            fancy = any(not req.sampling.is_plain for req, _ in plans)
+            if npre and fancy:
+                toks_dev, self.kv.buffers, self._presence = (
+                    self._prefill_pre_sampled(
+                        self.params,
+                        jnp.asarray(tokens),
+                        jnp.asarray(plens),
+                        self.kv.buffers,
+                        jnp.asarray(rows),
+                        jnp.asarray(pre_rows),
+                        jnp.asarray(pre_lens),
+                        jnp.asarray(full_tokens),
+                        jnp.asarray(full_plens),
+                        self._prefill_sampler(states),
+                        self._presence,
+                    )
+                )
+            elif npre:
+                toks_dev, self.kv.buffers = self._prefill_pre(
+                    self.params,
+                    jnp.asarray(tokens),
+                    jnp.asarray(plens),
+                    self.kv.buffers,
+                    jnp.asarray(rows),
+                    jnp.asarray(pre_rows),
+                    jnp.asarray(pre_lens),
+                )
+            elif fancy:
                 toks_dev, self.kv.buffers, self._presence = (
                     self._prefill_sampled(
                         self.params,
@@ -440,7 +645,7 @@ class Engine:
             toks = np.asarray(jax.block_until_ready(toks_dev))
         dt = time.perf_counter() - t0
         self.stats.record_prefill(
-            int(sum(st_.plen for st_ in states)),
+            int(plens.sum()),
             dt,
             emitted=len(states),
             batch=len(states),
@@ -449,6 +654,14 @@ class Engine:
         for i, state in enumerate(states):
             state.generated.append(int(toks[i]))
             state.pos = state.plen
+            if self._prefix is not None:
+                # index the prompt's full pages (hits refresh their LRU
+                # tick; new full pages — suffix included — become
+                # matchable the moment their contents are synced)
+                self._prefix.insert(
+                    state.request.prompt,
+                    self.kv.page_table[state.slot],
+                )
         return states
 
     # ---- stepping ----------------------------------------------------
@@ -461,11 +674,11 @@ class Engine:
         never pays for padded batch rows."""
         finished: list[FinishedRequest] = []
         cap = self.ecfg.max_prefill_batch
-        for s, reqs in self._plan_admission().items():
+        for (s, npre), plans in self._plan_admission().items():
             i = 0
-            while i < len(reqs):
-                n = 1 << (min(len(reqs) - i, cap).bit_length() - 1)
-                for state in self._admit_group(reqs[i : i + n], s):
+            while i < len(plans):
+                n = 1 << (min(len(plans) - i, cap).bit_length() - 1)
+                for state in self._admit_group(plans[i : i + n], s, npre):
                     if state.done:  # max_new_tokens == 1 or instant EOS
                         finished.append(self._finish(state))
                 i += n
@@ -481,7 +694,8 @@ class Engine:
             positions = np.zeros((self.ecfg.max_slots,), np.int32)
             idx = np.zeros((self.ecfg.max_slots,), np.int32)
             for st_ in active:
-                self.kv.alloc_upto(st_.slot, st_.pos)
+                self._ensure_writable(st_.slot, st_.pos)
+                self._alloc(st_.slot, st_.pos)
                 tokens[st_.slot] = st_.generated[-1]
                 positions[st_.slot] = st_.pos
                 idx[st_.slot] = len(st_.generated)
@@ -537,7 +751,13 @@ class Engine:
         need = self._page_need.pop(state.slot, 0)
         reclaimed = max(0, need - self.kv.pages_owned(state.slot))
         self.scheduler.evict(state.slot)
-        self.kv.free_slot(state.slot)
+        # radix-indexed pages are parked (refcount 0, device-resident)
+        # instead of freed: a future prompt sharing the prefix maps them
+        # straight back in, and eviction reclaims them on demand
+        self.kv.free_slot(
+            state.slot,
+            keep=None if self._prefix is None else self._prefix.page_in_tree,
+        )
         self._fancy_slots.discard(state.slot)
         if reclaimed:
             self.stats.record_reclaimed(reclaimed)
@@ -558,6 +778,7 @@ class Engine:
             finish_reason=reason,
             admit_step=state.admit_step,
             finish_step=self._step_idx,
+            prefix_hit_tokens=state.prefix_hit_tokens,
         )
 
     def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:
@@ -577,5 +798,17 @@ class Engine:
                 )
         return out
 
+    def reset_stats(self) -> None:
+        """Zero the per-run counters (benchmark repeats); the radix
+        tree's contents survive — only the numbers reset."""
+        self.stats = ServeStats()
+        if self._prefix is not None:
+            self._prefix.stats = PrefixStats()
+
     def stats_summary(self) -> dict:
-        return self.stats.summary()
+        out = self.stats.summary()
+        if self._prefix is not None:
+            out["prefix_cache"].update(self._prefix.stats.snapshot())
+            out["prefix_cache"]["enabled"] = True
+            out["prefix_cache"]["cached_pages"] = self.kv.cached_pages
+        return out

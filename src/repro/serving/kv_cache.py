@@ -11,16 +11,44 @@ Device state lives in ``buffers`` (one pool per layer group, built by
 host-side numpy/python structures updated between jit'd steps. Physical
 page 0 is the shared trash page: idle slots and unallocated table entries
 point at it, and every read masks it out via logical positions.
+
+Pages are *refcounted* so the prefix cache (``repro.serving.prefix``) can
+map one physical page into several slots' tables — both the paged decode
+kernels and ``prefill_paged`` read KV through page-table indirection, so
+physically shared pages cost nothing at read time. Every page is in
+exactly one of three states:
+
+  free    on ``_free`` (refcount 0) — allocatable;
+  live    refcount >= 1 — mapped into that many slots (or transiently
+          *pinned* by an admission plan, see ``incref``/``unpin``);
+  parked  refcount 0 but kept in ``_cached`` — content still indexed by
+          the prefix cache, reusable by a future hit, evictable back to
+          the free list at any time (``release_cached``).
+
+A slot must never write into a page it does not exclusively own:
+``cow_page`` gives it a fresh page with a jit'd device-side copy of the
+shared one (copy-on-write).
 """
 
 from __future__ import annotations
 
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
 __all__ = ["PagedKVCache"]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(buffers, src: jax.Array, dst: jax.Array):
+    """Device-side page copy across every layer pool (COW split)."""
+    return jax.tree.map(lambda b: b.at[:, dst].set(b[:, src]), buffers)
 
 
 class PagedKVCache:
@@ -63,11 +91,22 @@ class PagedKVCache:
         )
         self._free: list[int] = list(range(self.n_pages - 1, 0, -1))
         self._owned: dict[int, list[int]] = {}
+        # slot references per physical page; the trash page is never
+        # refcounted and never leaves index 0
+        self._ref = np.zeros((self.n_pages,), np.int32)
+        # parked pages: refcount 0, content still indexed by the prefix
+        # cache — out of the free list but reclaimable at any time
+        self._cached: set[int] = set()
 
     # ---- allocation --------------------------------------------------
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def cached_pages(self) -> int:
+        """Parked (refcount-0, prefix-cache-indexed) pages."""
+        return len(self._cached)
 
     def pages_for_len(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page)
@@ -75,25 +114,131 @@ class PagedKVCache:
     def pages_owned(self, slot: int) -> int:
         return len(self._owned.get(slot, []))
 
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def is_cached(self, page: int) -> bool:
+        return page in self._cached
+
     def alloc_upto(self, slot: int, pos: int) -> None:
-        """Ensure logical pages [0, pos // page] of ``slot`` are backed."""
+        """Ensure logical pages [0, pos // page] of ``slot`` are backed.
+
+        Atomic: on pool exhaustion every page this call allocated is
+        rolled back before raising, so ``_owned``/``page_table`` are
+        never left half-grown (the engine treats the raise as "request
+        cannot proceed", not "cache corrupted")."""
         need = pos // self.page + 1
         if need > self.pages_per_seq:
             raise ValueError(
                 f"position {pos} exceeds slot capacity {self.max_len}"
             )
         owned = self._owned.setdefault(slot, [])
+        added: list[int] = []
         while len(owned) < need:
             if not self._free:
+                for p in reversed(added):
+                    owned.pop()
+                    self.page_table[slot, len(owned)] = 0
+                    self._ref[p] = 0
+                    self._free.append(p)
+                if not owned:
+                    del self._owned[slot]
                 raise RuntimeError("KV cache out of pages")
             p = self._free.pop()
+            self._ref[p] = 1
             self.page_table[slot, len(owned)] = p
             owned.append(p)
+            added.append(p)
 
-    def free_slot(self, slot: int) -> None:
+    def free_slot(
+        self, slot: int, *, keep: Callable[[int], bool] | None = None
+    ) -> None:
+        """Drop the slot's references. A page whose refcount hits zero
+        returns to the free list — unless ``keep(page)`` claims it, in
+        which case it is *parked* (kept device-resident for the prefix
+        cache, reclaimable via ``release_cached``)."""
         for p in self._owned.pop(slot, []):
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                if keep is not None and keep(p):
+                    self._cached.add(p)
+                else:
+                    self._free.append(p)
         self.page_table[slot, :] = 0
+
+    # ---- sharing (prefix cache) --------------------------------------
+    def incref(self, page: int) -> None:
+        """Pin a live page (one more reference, no slot mapping yet)."""
+        if page == 0 or self._ref[page] < 1:
+            raise ValueError(f"page {page} is not live (cannot incref)")
+        self._ref[page] += 1
+
+    def take_cached(self, page: int) -> None:
+        """Pin a parked page: refcount 0 -> 1, out of the parked set.
+        The caller must ``adopt`` it into a slot or ``unpin`` it."""
+        self._cached.remove(page)
+        self._ref[page] = 1
+
+    def unpin(self, page: int) -> None:
+        """Drop a pin taken by ``incref``/``take_cached`` without a slot
+        mapping (an admission plan that was abandoned). A pin dropping to
+        refcount 0 parks the page again — pins only ever come from
+        prefix-cache-indexed pages."""
+        if self._ref[page] < 1:
+            raise ValueError(f"page {page} has no reference to unpin")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._cached.add(page)
+
+    def adopt(self, slot: int, pages: list[int]) -> None:
+        """Map already-pinned pages as the slot's first logical pages.
+        Refcounts are unchanged — each pin becomes the slot's reference.
+        Must run before any ``alloc_upto`` on the slot."""
+        owned = self._owned.setdefault(slot, [])
+        if owned:
+            raise ValueError(f"slot {slot} already owns pages")
+        for i, p in enumerate(pages):
+            self.page_table[slot, i] = p
+            owned.append(int(p))
+
+    def release_cached(self, page: int) -> None:
+        """Evict a parked page back to the free list (LRU eviction by
+        the prefix cache — its index entry must go too)."""
+        self._cached.remove(page)
+        self._free.append(page)
+
+    def cow_page(
+        self,
+        slot: int,
+        logical: int,
+        *,
+        keep: Callable[[int], bool] | None = None,
+    ) -> int:
+        """Copy-on-write: give ``slot`` a private copy of its logical
+        page ``logical`` (a fresh page + a jit'd device-side copy of the
+        shared page's contents), dropping its reference on the shared
+        one. Returns the new physical page. ``keep`` follows
+        ``free_slot`` semantics if the source refcount hits zero."""
+        owned = self._owned[slot]
+        src = owned[logical]
+        if not self._free:
+            raise RuntimeError("KV cache out of pages")
+        dst = self._free.pop()
+        self._ref[dst] = 1
+        self.buffers = _copy_page(
+            self.buffers,
+            jnp.asarray(src, jnp.int32),
+            jnp.asarray(dst, jnp.int32),
+        )
+        self._ref[src] -= 1
+        if self._ref[src] == 0:
+            if keep is not None and keep(src):
+                self._cached.add(src)
+            else:
+                self._free.append(src)
+        owned[logical] = dst
+        self.page_table[slot, logical] = dst
+        return dst
 
     # ---- views -------------------------------------------------------
     def table_row(self, slot: int, n_pages: int) -> np.ndarray:
@@ -113,6 +258,25 @@ class PagedKVCache:
             )
         row = np.zeros(n_pages, np.int32)
         row[:need] = self.page_table[slot, :need]
+        return row
+
+    def suffix_row(
+        self, slot: int, n_prefix_pages: int, plen: int, n_pages: int
+    ) -> np.ndarray:
+        """Prefill page row for the *uncached suffix* of a prefix-cache
+        hit: the slot's logical pages [n_prefix_pages,
+        pages_for_len(plen)) followed by trash zeros. The suffix is
+        page-aligned by construction (prefix hits cover full pages), so
+        suffix token i scatters into row entry i // page."""
+        need = self.pages_for_len(plen) - n_prefix_pages
+        if need > n_pages:
+            raise ValueError(
+                f"suffix needs {need} pages, bucket has {n_pages}"
+            )
+        row = np.zeros(n_pages, np.int32)
+        row[:need] = self.page_table[
+            slot, n_prefix_pages : n_prefix_pages + need
+        ]
         return row
 
     def memory_bytes(self) -> int:

@@ -48,6 +48,8 @@ class SequenceState:
     pos: int = 0  # write position of the *next* decode token
     generated: list[int] = dataclasses.field(default_factory=list)
     admit_step: int = 0
+    # prompt tokens served from the prefix cache (0 = full prefill)
+    prefix_hit_tokens: int = 0
 
     @property
     def plen(self) -> int:
@@ -71,3 +73,6 @@ class FinishedRequest:
     finish_reason: str  # "length" | "eos" | "capacity"
     admit_step: int
     finish_step: int
+    # prompt tokens the admission served straight from the prefix cache
+    # instead of prefilling (mapped shared pages)
+    prefix_hit_tokens: int = 0

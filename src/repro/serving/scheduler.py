@@ -25,6 +25,9 @@ class Scheduler:
         self.max_slots = max_slots
         self.waiting: deque[Request] = deque()
         self.slots: list[SequenceState | None] = [None] * max_slots
+        # anti-starvation aging: admission passes that admitted *around*
+        # each still-waiting request (keyed by uid; cleared on admit)
+        self._skips: dict[int, int] = {}
 
     # ---- queue -------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -36,14 +39,23 @@ class Scheduler:
         engine filters this window by slot/page budget and may admit
         later (smaller) requests past an oversized head-of-queue one.
         ``k`` bounds how many requests each admission pass may consider
-        (and thus admit past the head) — it is not an anti-starvation
-        guarantee: under sustained small-request traffic an oversized
-        request can wait until the pool drains (aging/preemption is
-        future work)."""
+        (and thus admit past the head). Starvation is bounded by aging:
+        the engine reports each pass's skipped-over requests via
+        ``note_skips`` and stops admitting around any request whose
+        ``skip_count`` reaches ``EngineConfig(max_skips=)``."""
         if k < 1:
             raise ValueError("lookahead k must be >= 1")
         n = min(k, len(self.waiting))
         return [self.waiting[i] for i in range(n)]
+
+    def note_skips(self, reqs: list[Request]) -> None:
+        """Record one admission pass that admitted *around* each of
+        ``reqs`` (a later request got a slot while they waited)."""
+        for req in reqs:
+            self._skips[req.uid] = self._skips.get(req.uid, 0) + 1
+
+    def skip_count(self, req: Request) -> int:
+        return self._skips.get(req.uid, 0)
 
     # ---- slots -------------------------------------------------------
     def free_slot(self) -> int | None:
@@ -80,6 +92,7 @@ class Scheduler:
             else:
                 raise ValueError("request is not in the waiting queue")
             req = request
+        self._skips.pop(req.uid, None)
         state = SequenceState(request=req, slot=slot, admit_step=step)
         self.slots[slot] = state
         return state

@@ -1,10 +1,14 @@
 """Property tests: PagedKVCache allocator invariants.
 
-Random alloc/free traces against a pure-python model of the free list.
-The invariants the serving engine depends on every step: pages are never
-leaked or double-allocated, the trash page (physical page 0) is never
-handed out, freeing a slot restores ``free_pages`` and zeroes its
-``page_table`` row.
+Random alloc/free traces — plus refcounted share / copy-on-write /
+park / evict traces — against a pure-python model of the free list and
+the prefix cache's page index. The invariants the serving engine
+depends on every step: refcounts never go negative and always equal the
+number of slots mapping a page (a refcount-1 page is owned by exactly
+one slot), free ∪ owned ∪ cached is exactly the pool, the trash page
+(physical page 0) is never handed out or refcounted, a failed
+``alloc_upto`` rolls back atomically, and freeing a slot restores
+``free_pages`` and zeroes its ``page_table`` row.
 
 A seeded numpy fuzz always runs (so the invariants gate every PR even
 without dev deps); when ``hypothesis`` is installed the same traces are
@@ -38,12 +42,32 @@ def _tiny_cfg():
 
 def _check_invariants(kv: PagedKVCache) -> None:
     owned = [p for pages in kv._owned.values() for p in pages]
-    # no double allocation, no trash-page ownership
-    assert len(owned) == len(set(owned))
-    assert 0 not in owned and 0 not in kv._free
-    # conservation: every non-trash page is exactly owned or free
-    assert sorted(owned + kv._free) == list(range(1, kv.n_pages))
-    assert kv.free_pages == kv.n_pages - 1 - len(owned)
+    counts: dict[int, int] = {}
+    for p in owned:
+        counts[p] = counts.get(p, 0) + 1
+    # the trash page is never owned, freed, parked or refcounted
+    assert 0 not in owned and 0 not in kv._free and 0 not in kv._cached
+    assert kv._ref[0] == 0
+    # refcounts are never negative and (at op boundaries, with no
+    # dangling pins) equal the number of slots mapping each page — in
+    # particular a refcount-1 page is owned by exactly ONE slot
+    assert (kv._ref >= 0).all()
+    for p in range(1, kv.n_pages):
+        assert kv._ref[p] == counts.get(p, 0)
+    # no slot maps the same page twice
+    for pages in kv._owned.values():
+        assert len(pages) == len(set(pages))
+    # conservation: free ∪ owned ∪ cached == pool, pairwise disjoint
+    assert set(kv._free) | set(counts) | kv._cached == set(
+        range(1, kv.n_pages)
+    )
+    assert not set(kv._free) & set(counts)
+    assert not set(kv._free) & kv._cached
+    assert not set(counts) & kv._cached
+    assert len(kv._free) == len(set(kv._free))
+    assert kv.free_pages == (
+        kv.n_pages - 1 - len(counts) - len(kv._cached)
+    )
     # page_table rows mirror the owned lists, trash-padded
     for slot in range(kv.max_slots):
         pages = kv._owned.get(slot, [])
@@ -107,6 +131,80 @@ def test_alloc_free_roundtrip_seeded(seed):
     _roundtrip(positions, int(rng.integers(0, SLOTS)))
 
 
+def _run_share_trace(ops) -> None:
+    """Extended trace over the refcounted API: share (pin + adopt),
+    copy-on-write splits, radix parking (free with a keep hook) and LRU
+    eviction, with the full conservation/refcount invariant checked
+    after every op. ``tree`` models the prefix cache's page index."""
+    kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
+    tree: set[int] = set()
+    for op, slot, arg in ops:
+        if op == "alloc":
+            before = list(kv._owned.get(slot, []))
+            try:
+                kv.alloc_upto(slot, arg)
+            except RuntimeError:
+                # atomic: a failed grow must not retain anything
+                assert kv._owned.get(slot, []) == before
+        elif op == "free":
+            if arg % 2:  # "insert": index the slot's pages, then park
+                tree.update(kv._owned.get(slot, []))
+            kv.free_slot(slot, keep=lambda p: p in tree)
+        elif op == "share":
+            src = arg % SLOTS
+            src_pages = kv._owned.get(src, [])
+            if slot != src and not kv._owned.get(slot) and src_pages:
+                take = src_pages[: 1 + arg % len(src_pages)]
+                for p in take:
+                    kv.incref(p)
+                kv.adopt(slot, take)
+        elif op == "adopt_cached":
+            if not kv._owned.get(slot) and kv._cached:
+                take = sorted(kv._cached)[: 1 + arg % 3]
+                for p in take:
+                    kv.take_cached(p)
+                kv.adopt(slot, take)
+        elif op == "cow":
+            owned = kv._owned.get(slot, [])
+            li = arg % len(owned) if owned else 0
+            if owned and kv._free and (
+                kv.refcount(owned[li]) > 1 or owned[li] in tree
+            ):
+                old = owned[li]
+                new = kv.cow_page(slot, li, keep=lambda p: p in tree)
+                assert new != old and kv.refcount(new) == 1
+        elif op == "evict":
+            if kv._cached:
+                victim = sorted(kv._cached)[arg % len(kv._cached)]
+                kv.release_cached(victim)
+                tree.discard(victim)
+        _check_invariants(kv)
+    for slot in range(SLOTS):
+        kv.free_slot(slot)  # no keep hook: nothing new parks
+        _check_invariants(kv)
+    for p in sorted(kv._cached):
+        kv.release_cached(p)
+    assert kv.free_pages == kv.n_pages - 1
+    assert (kv._ref == 0).all()
+
+
+_SHARE_OPS = ["alloc", "free", "share", "adopt_cached", "cow", "evict"]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_share_cow_evict_trace_seeded(seed):
+    rng = np.random.default_rng(200 + seed)
+    ops = [
+        (
+            _SHARE_OPS[int(rng.integers(0, len(_SHARE_OPS)))],
+            int(rng.integers(0, SLOTS)),
+            int(rng.integers(0, MAX_LEN)),
+        )
+        for _ in range(int(rng.integers(10, 60)))
+    ]
+    _run_share_trace(ops)
+
+
 def test_capacity_and_exhaustion_errors():
     kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
     with pytest.raises(ValueError):
@@ -150,3 +248,17 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=25, deadline=None)
     def test_alloc_free_roundtrip_restores_free_pages(positions, slot):
         _roundtrip(positions, slot)
+
+    @given(
+        ops=st.lists(
+            st.tuples(
+                st.sampled_from(_SHARE_OPS),
+                st.integers(0, SLOTS - 1),
+                st.integers(0, MAX_LEN - 1),
+            ),
+            max_size=60,
+        )
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_share_cow_evict_trace(ops):
+        _run_share_trace(ops)

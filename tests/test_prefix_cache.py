@@ -1,0 +1,518 @@
+"""Prefix-cache subsystem: refcounted page sharing, copy-on-write,
+radix-tree matching/eviction, cache-aware partial prefill, and the
+engine-level guarantee that the cache is a pure optimization (identical
+token streams on vs off, greedy and seeded-sampled)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import attn_pattern as ap
+from repro.launch.mesh import make_local_mesh
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving import (
+    Engine,
+    EngineConfig,
+    PagedKVCache,
+    PrefixCache,
+    SamplingParams,
+    Scheduler,
+)
+from repro.serving.request import Request
+
+
+def _smoke_cfg(**kw):
+    return registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=2, vocab_size=128, **kw
+    )
+
+
+def _tiny_cfg(page=4):
+    return registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=1, num_heads=2, num_kv_heads=1, head_dim=8,
+        attn_block=page,
+    )
+
+
+# ----------------------------------------------------------------------
+# Refcounted allocator: COW + atomic alloc_upto (no model math)
+# ----------------------------------------------------------------------
+
+
+def test_cow_page_copies_device_content_and_remaps():
+    cfg = _tiny_cfg()
+    kv = PagedKVCache(cfg, max_slots=2, max_len=4 * cfg.attn_block)
+    kv.alloc_upto(0, kv.page - 1)
+    src = int(kv.page_table[0, 0])
+    # stamp recognizable content into the shared page
+    for pool in kv.buffers:
+        pool["k"] = pool["k"].at[:, src].set(7.5)
+        pool["v"] = pool["v"].at[:, src].set(-3.25)
+    kv.incref(src)  # a second reference (as if mapped into another slot)
+    free_before = kv.free_pages
+    dst = kv.cow_page(0, 0)
+    assert dst != src
+    assert kv.page_table[0, 0] == dst
+    assert kv.refcount(dst) == 1 and kv.refcount(src) == 1
+    assert kv.free_pages == free_before - 1
+    for pool in kv.buffers:
+        np.testing.assert_array_equal(
+            np.asarray(pool["k"][:, dst]), np.asarray(pool["k"][:, src])
+        )
+        assert (np.asarray(pool["v"][:, dst]) == -3.25).all()
+    kv.unpin(src)  # phantom holder drops its pin -> parked
+    assert kv.is_cached(src)
+
+
+def test_alloc_upto_atomic_rollback_on_exhaustion():
+    """Regression: pool exhaustion mid-growth used to leave the slot
+    half-grown (pages allocated, then a raise) — the rollback must
+    restore _owned/page_table/free list exactly."""
+    cfg = _tiny_cfg()
+    page = cfg.attn_block
+    kv = PagedKVCache(cfg, max_slots=2, max_len=4 * page, n_pages=6)
+    kv.alloc_upto(0, 3 * page - 1)  # 3 of 5 usable pages
+    # slot 1 wants 3 pages; only 2 are free -> must fail WITHOUT
+    # retaining the 2 it could have grabbed
+    with pytest.raises(RuntimeError):
+        kv.alloc_upto(1, 3 * page - 1)
+    assert kv.pages_owned(1) == 0
+    assert (kv.page_table[1] == 0).all()
+    assert kv.free_pages == 2
+    # partially-grown slot: rollback only the new pages, keep the old
+    kv.alloc_upto(1, page - 1)
+    assert kv.pages_owned(1) == 1
+    first = int(kv.page_table[1, 0])
+    with pytest.raises(RuntimeError):
+        kv.alloc_upto(1, 4 * page - 1)
+    assert kv.pages_owned(1) == 1 and kv.page_table[1, 0] == first
+    assert kv.free_pages == 1
+    # and the failed grow didn't corrupt refcounts
+    assert kv.refcount(first) == 1
+    kv.free_slot(0), kv.free_slot(1)
+    assert kv.free_pages == kv.n_pages - 1
+
+
+# ----------------------------------------------------------------------
+# Radix tree: matching, the one-token cap, LRU leaf eviction
+# ----------------------------------------------------------------------
+
+
+def test_radix_match_insert_and_suffix_cap():
+    cfg = _tiny_cfg()
+    page = cfg.attn_block
+    kv = PagedKVCache(cfg, max_slots=2, max_len=4 * page)
+    pc = PrefixCache(kv)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 50, 3 * page + 2).astype(np.int32)
+
+    assert pc.match(prompt) == []  # empty tree
+    kv.alloc_upto(0, prompt.size - 1)
+    pc.insert(prompt, kv.page_table[0])
+    assert pc.nodes == 3  # full blocks only; the partial tail is private
+
+    # full three-block hit (suffix of 2 tokens remains)
+    pages = pc.match(prompt)
+    assert pages == [int(kv.page_table[0, i]) for i in range(3)]
+    # page-multiple prompt: the cap drops the last block so >= 1 token
+    # of suffix is always left to prefill (its logits emit token 0)
+    assert len(pc.match(prompt[: 3 * page])) == 2
+    assert len(pc.match(prompt[: page + 1])) == 1
+    # diverging block: no hit beyond the shared prefix
+    other = prompt.copy()
+    other[page + 3] += 1
+    assert len(pc.match(other)) == 1
+
+
+def test_radix_lru_evicts_leaves_first():
+    cfg = _tiny_cfg()
+    page = cfg.attn_block
+    kv = PagedKVCache(cfg, max_slots=3, max_len=4 * page)
+    pc = PrefixCache(kv)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 50, 2 * page + 1).astype(np.int32)
+    b = rng.integers(50, 100, 2 * page + 1).astype(np.int32)
+    for slot, prompt in ((0, a), (1, b)):
+        kv.alloc_upto(slot, prompt.size - 1)
+        pc.insert(prompt, kv.page_table[slot])
+        kv.free_slot(slot, keep=pc.page_in_tree)
+    assert kv.cached_pages == 4 and kv.free_pages == kv.n_pages - 5
+    a_pages = pc.match(a)  # refresh A's ticks: B is now LRU
+    pc.match(a)
+
+    assert pc.ensure_free(kv.free_pages + 2)
+    # B's chain went (leaf before its parent — never orphan a child)
+    assert pc.match(b) == []
+    assert pc.match(a) == a_pages  # A survived
+    # evicting the rest takes A too; further asks are refused, not stuck
+    assert pc.ensure_free(kv.free_pages + 2)
+    assert not pc.ensure_free(kv.free_pages + 1)
+    assert kv.cached_pages == 0
+
+
+# ----------------------------------------------------------------------
+# Partial prefill vs the full-prefill oracle
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparse", [False, True])
+def test_partial_prefill_matches_full_prefill(sparse):
+    """Suffix-only prefill over shared prefix pages must reproduce the
+    full prefill bit-for-bit in what matters: last-token logits and the
+    suffix K/V pages it scatters."""
+    cfg = _smoke_cfg(sparse_attention=sparse)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    page = cfg.attn_block
+    rng = np.random.default_rng(0)
+    plen = 2 * page + 17
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    s_full = 4 * page
+
+    kv = PagedKVCache(cfg, max_slots=2, max_len=4 * page)
+    kv.alloc_upto(0, plen - 1)
+    tokens = np.zeros((1, s_full), np.int32)
+    tokens[0, :plen] = prompt
+    ref_logits, kv.buffers = T.prefill_paged(
+        cfg, params, jnp.asarray(tokens), jnp.asarray([plen], np.int32),
+        kv.buffers, jnp.asarray(kv.bucket_row(0, plen, 4))[None],
+    )
+
+    # slot 1: adopt slot 0's two full pages, prefill only the suffix
+    npre = 2
+    pre = [int(kv.page_table[0, i]) for i in range(npre)]
+    for p in pre:
+        kv.incref(p)
+    kv.adopt(1, pre)
+    kv.alloc_upto(1, plen - 1)
+    suf_len = plen - npre * page
+    suf_tokens = np.zeros((1, page), np.int32)
+    suf_tokens[0, :suf_len] = prompt[npre * page :]
+    got_logits, kv.buffers = T.prefill_paged(
+        cfg, params, jnp.asarray(suf_tokens),
+        jnp.asarray([suf_len], np.int32), kv.buffers,
+        jnp.asarray(kv.suffix_row(1, npre, plen, 1))[None],
+        prefix_rows=jnp.asarray(np.asarray(pre, np.int32))[None],
+        prefix_lens=jnp.asarray([npre * page], np.int32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_logits), np.asarray(ref_logits), rtol=1e-5, atol=1e-5
+    )
+    for pool in kv.buffers:
+        for name in ("k", "v"):
+            np.testing.assert_allclose(
+                np.asarray(pool[name][:, kv.page_table[1, npre]]),
+                np.asarray(pool[name][:, kv.page_table[0, npre]]),
+                rtol=1e-5,
+                atol=1e-5,
+            )
+
+
+@pytest.mark.parametrize(
+    "local,glob,stride", [(2, 1, 0), (1, 0, 0), (1, 2, 4), (3, 1, 2)]
+)
+def test_elementwise_pixelfly_mask_matches_reference(local, glob, stride):
+    """The partial-prefill path rebuilds the pixelfly block mask
+    elementwise from absolute positions; on power-of-two block grids it
+    must equal the stretched-grid reference exactly (the full-prefill
+    schedule), or cached prefixes would attend differently."""
+    block = 4
+    for nb in (1, 2, 4, 8, 16):
+        ref = ap.pixelfly_attention_block_mask(
+            nb * block,
+            nb * block,
+            ap.AttentionPatternConfig(
+                block=block,
+                local_blocks=local,
+                max_stride=stride,
+                global_blocks=glob,
+            ),
+            causal=True,
+        )
+        qb = np.arange(nb)
+        # last row of each q block vs first column of each k block:
+        # kpos <= qpos exactly when kb <= qb, isolating block visibility
+        got = np.asarray(
+            L._pixelfly_visible(
+                jnp.asarray(qb[:, None] * block + block - 1),
+                jnp.asarray(qb[None, :] * block),
+                block=block,
+                local_blocks=local,
+                global_blocks=glob,
+                max_stride=stride,
+            )
+        )
+        np.testing.assert_array_equal(got, ref)
+
+
+# ----------------------------------------------------------------------
+# Engine: the cache is a pure optimization
+# ----------------------------------------------------------------------
+
+
+def _shared_prefix_trace(cfg, rng, n, sys_pages=(1, 2)):
+    """Requests drawing from a couple of shared system prompts plus a
+    random tail; ~1/4 share nothing at all."""
+    page = cfg.attn_block
+    sys_prompts = [
+        rng.integers(0, cfg.vocab_size, k * page).astype(np.int32)
+        for k in sys_pages
+    ]
+    out = []
+    for _ in range(n):
+        tail = rng.integers(
+            0, cfg.vocab_size, int(rng.integers(3, page))
+        ).astype(np.int32)
+        r = int(rng.integers(0, len(sys_prompts) + 1))
+        prompt = (
+            tail
+            if r == len(sys_prompts)
+            else np.concatenate([sys_prompts[r], tail])
+        )
+        out.append((prompt, int(rng.integers(2, 6))))
+    return out
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+def test_engine_prefix_on_off_identical_streams(sampled):
+    """Differential parity: prefix cache on vs off over a randomized
+    shared-prefix trace produces bit-identical token streams, greedy and
+    seeded-sampled (sampling determinism survives partial prefill: the
+    noise stream keys on (seed, sample_idx) only, and the presence
+    buffer is seeded from the whole prompt, cached prefix included)."""
+    cfg = _smoke_cfg(sparse_attention=True)
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(23)
+    trace = _shared_prefix_trace(cfg, rng, 10)
+    page = cfg.attn_block
+
+    params = None
+    streams, hit_stats = {}, {}
+    for on in (False, True):
+        eng = Engine(
+            cfg,
+            mesh,
+            engine_cfg=EngineConfig(
+                max_slots=3, max_len=4 * page, prefix_cache=on
+            ),
+            params=params,
+        )
+        params = eng.params
+        srng = np.random.default_rng(7)  # same interleaving both runs
+        out, pending = {}, list(trace)
+        k = 0
+        while pending or not eng.scheduler.idle:
+            burst = int(srng.integers(1, 4))
+            for prompt, gen in pending[:burst]:
+                sp = (
+                    SamplingParams(
+                        temperature=0.9, top_k=25, top_p=0.9, seed=1000 + k
+                    )
+                    if sampled and k % 2  # mix plain + sampled traffic
+                    else None
+                )
+                eng.submit(prompt, gen, sampling=sp)
+                k += 1
+            pending = pending[burst:]
+            for f in eng.step():
+                out[f.uid] = (f.tokens.tolist(), f.prefix_hit_tokens)
+        streams[on] = out
+        hit_stats[on] = eng.stats_summary()["prefix_cache"]
+        # page conservation at idle: everything not parked is free
+        assert eng.kv.free_pages + eng.kv.cached_pages == eng.kv.n_pages - 1
+        if on:
+            assert eng.kv.cached_pages > 0
+
+    assert streams[True].keys() == streams[False].keys()
+    for uid in streams[False]:
+        assert streams[True][uid][0] == streams[False][uid][0]
+    # the cache actually did something: hits happened, prefill shrank
+    assert hit_stats[True]["hit_tokens"] > 0
+    assert any(hit for _, hit in streams[True].values())
+    assert all(hit == 0 for _, hit in streams[False].values())
+
+
+def test_engine_prefix_hit_prefills_only_suffix():
+    """A hit admission must issue the *partial* prefill program (suffix
+    bucket + prefix rows), count only suffix tokens as prefilled, and
+    report the hit on the finished request."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=4 * page,
+                                prefix_cache=True),
+    )
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 2 * page).astype(np.int32)
+    tails = [
+        rng.integers(0, cfg.vocab_size, 9).astype(np.int32) for _ in range(2)
+    ]
+
+    eng.submit(np.concatenate([sys_prompt, tails[0]]), 2)
+    f0 = eng.drain(max_steps=20)[0]
+    assert f0.prefix_hit_tokens == 0
+
+    calls = []
+    orig = eng._prefill_pre
+    def counting(*a):
+        calls.append((tuple(a[1].shape), tuple(a[5].shape)))
+        return orig(*a)
+    eng._prefill_pre = counting
+
+    eng.reset_stats()
+    eng.submit(np.concatenate([sys_prompt, tails[1]]), 2)
+    f1 = eng.drain(max_steps=20)[0]
+    assert f1.prefix_hit_tokens == 2 * page
+    # one partial-prefill call: (N=1, S=1 page suffix), 2 prefix pages
+    assert calls == [((1, page), (1, 2))]
+    s = eng.stats_summary()
+    assert s["prefill_tokens"] == 9  # the suffix, not the whole prompt
+    assert s["prefix_cache"]["hit_tokens"] == 2 * page
+    assert s["prefix_cache"]["hit_rate"] == pytest.approx(
+        2 * page / (2 * page + 9), abs=1e-3
+    )
+
+
+def test_engine_prefix_eviction_never_blocks_admission():
+    """With a pool sized so parked pages must be reclaimed, admission
+    evicts LRU cached pages instead of failing — the cache is strictly
+    opportunistic."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+    # 2 slots x 2 pages worst case = 4 usable pages (5 with trash)
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=2 * page,
+                                prefix_cache=True),
+    )
+    rng = np.random.default_rng(11)
+    # two disjoint 1-page prompts -> 2+ parked pages after they finish
+    for _ in range(2):
+        eng.submit(
+            rng.integers(0, cfg.vocab_size, page + 3).astype(np.int32), 2
+        )
+    eng.drain(max_steps=30)
+    assert eng.kv.cached_pages >= 2
+    # now a wave needing the whole pool: parked pages must be evicted
+    for _ in range(2):
+        eng.submit(
+            rng.integers(0, cfg.vocab_size, 2 * page - 2).astype(np.int32), 2
+        )
+    fins = eng.drain(max_steps=40)
+    assert len(fins) == 2
+    assert eng._prefix.stats.evicted_pages > 0
+    assert eng.kv.free_pages + eng.kv.cached_pages == eng.kv.n_pages - 1
+
+
+def test_engine_cow_guard_preserves_stream():
+    """Force the COW path: an outside pin on the page a slot is about to
+    write into makes refcount > 1, so the decode step must split it with
+    a device-side copy — and the tokens must not change."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+    prompt = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, page + 4, dtype=np.int32
+    )
+    ref_eng = Engine(
+        cfg, mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=2 * page,
+                                prefix_cache=True),
+    )
+    ref_eng.submit(prompt, 5)
+    ref = ref_eng.drain(max_steps=20)[0].tokens
+
+    # 2 slots' worth of pool with one request in flight: the COW
+    # split needs a free page to copy into
+    eng = Engine(
+        cfg, mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=2 * page,
+                                prefix_cache=True),
+        params=ref_eng.params,
+    )
+    eng.submit(prompt, 5)
+    eng.step()  # prefill + first decode token
+    slot = eng.scheduler.active()[0].slot
+    shared = int(eng.kv.page_table[slot, 1])  # the partial write page
+    eng.kv.incref(shared)  # phantom second owner
+    eng.step()  # next decode write targets the shared page -> COW
+    assert eng.stats.cow_copies == 1
+    assert int(eng.kv.page_table[slot, 1]) != shared
+    assert eng.kv.refcount(shared) == 1  # only the phantom holds it now
+    fins = eng.drain(max_steps=20)
+    np.testing.assert_array_equal(fins[0].tokens, ref)
+    eng.kv.unpin(shared)
+
+
+# ----------------------------------------------------------------------
+# Anti-starvation aging
+# ----------------------------------------------------------------------
+
+
+def test_scheduler_skip_counters():
+    sch = Scheduler(1)
+    reqs = [Request(i, np.array([1, 2]), 2) for i in range(3)]
+    for r in reqs:
+        sch.submit(r)
+    assert sch.skip_count(reqs[0]) == 0
+    sch.note_skips([reqs[0], reqs[2]])
+    sch.note_skips([reqs[0]])
+    assert sch.skip_count(reqs[0]) == 2
+    assert sch.skip_count(reqs[1]) == 0
+    assert sch.skip_count(reqs[2]) == 1
+    sch.admit(0)  # admitting clears the counter
+    assert sch.skip_count(reqs[0]) == 0
+
+
+def test_engine_aging_stops_admitting_around_starved_request():
+    """After ``max_skips`` passes of being admitted around, a skipped
+    request becomes a barrier: later small requests queue behind it
+    instead of jumping it forever, and it admits as soon as its pages
+    free up — strictly before anything submitted after it."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+
+    def serve(max_skips):
+        eng = Engine(
+            cfg,
+            mesh,
+            engine_cfg=EngineConfig(
+                max_slots=3, max_len=3 * page, n_pages=6,
+                max_skips=max_skips,
+            ),
+        )
+        rng = np.random.default_rng(13)
+        hog = eng.submit(
+            rng.integers(0, cfg.vocab_size, 2 * page + 4), 3 * page
+        )  # 3 pages held for many steps
+        eng.step()
+        big = eng.submit(
+            rng.integers(0, cfg.vocab_size, 2 * page + 4), 3
+        )  # needs 3 pages; only 2 free while the hog lives
+        smalls = [
+            eng.submit(rng.integers(0, cfg.vocab_size, 6), 2)
+            for _ in range(4)
+        ]
+        fins = {f.uid: f for f in eng.drain(max_steps=300)}
+        return hog, big, smalls, fins
+
+    # aging on: one skip allowed, then the big request blocks the queue
+    hog, big, smalls, fins = serve(max_skips=1)
+    early = [u for u in smalls if fins[u].admit_step < fins[big].admit_step]
+    held = [u for u in smalls if fins[u].admit_step >= fins[big].admit_step]
+    assert len(early) <= 2  # at most the one pass that aged the big one
+    assert held, "the barrier must hold some smalls back"
+    # aging off: every small jumps the starving big request
+    hog, big, smalls, fins = serve(max_skips=0)
+    assert all(
+        fins[u].admit_step < fins[big].admit_step for u in smalls
+    )

@@ -218,6 +218,18 @@ def test_engine_rejects_top_k_beyond_candidate_cap():
     eng.ecfg = EngineConfig(max_slots=1, max_len=64, sampler_candidates=8)
     eng.scheduler = Scheduler(1)
     eng._uid = 0
+    # submit also sanity-checks the request against the page pool; give
+    # the model-less skeleton a one-slot pool's worth of geometry
+    from repro.serving import PagedKVCache
+
+    kv_cfg = registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=1, num_heads=2, num_kv_heads=1, head_dim=8
+    )
+    eng.kv = PagedKVCache(
+        kv_cfg,
+        max_slots=1,
+        max_len=eng.ecfg.rounded(kv_cfg.attn_block).max_len,
+    )
     with pytest.raises(ValueError, match="candidate cap"):
         Engine.submit(
             eng, np.arange(4, dtype=np.int32), 2,
