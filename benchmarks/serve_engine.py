@@ -25,6 +25,19 @@ Three measurements on the same smoke config and shared weights:
    straight into the slot and prefill only the suffix, so
    ``admission_speedup`` (prefill seconds, off/on) is the headline
    number; token streams are asserted identical either way.
+6. **goodput** — SLO-aware scheduling under seeded traffic
+   (``repro.serving.workloads``): a *burst* trace (deadline'd
+   high-priority burst landing on a pool full of long background
+   decodes) and a *long-tail* trace (open-loop Poisson arrivals, an
+   interactive deadline'd tier over a heavy batch tail), each served
+   with preemption on vs off on the same seed. The headline is SLO
+   attainment: with preemption the burst swaps the background out to
+   host memory (``repro.serving.swap``) and meets its deadlines;
+   without, it queues behind the slots and misses them. Token streams
+   are asserted bit-identical across modes — preemption is a pure
+   scheduling change. A *chat* trace (multi-turn conversations, prefix
+   cache on) rides along to measure turn-2+ admissions hitting the
+   decode-written pages the engine indexes at finish.
 
 Every (N, S) prefill bucket a timed trace will hit is compiled *before*
 the clock starts (``_warm_buckets``), so latency percentiles measure
@@ -52,6 +65,7 @@ from repro.configs import registry
 from repro.launch.mesh import make_local_mesh
 from repro.launch.serve import Server
 from repro.serving import Engine, EngineConfig, SamplingParams, ServeStats
+from repro.serving import workloads
 
 ARCH = "qwen3-1.7b"
 BATCH = 4
@@ -255,6 +269,174 @@ def _measure_prefix_cache(
     return row
 
 
+def _goodput_pair(
+    cfg,
+    mesh,
+    params,
+    slots: int,
+    max_len: int,
+    items: list[workloads.WorkItem],
+    *,
+    strict: bool = False,
+) -> dict:
+    """Serve one seeded trace with preemption on vs off (identical
+    engines otherwise) and fold each run into a goodput row.
+
+    Calibration first: the "on" engine replays the trace once with
+    deadlines unarmed — warming every program including the swap path —
+    and its measured seconds-per-step converts the trace's
+    step-denominated deadlines into wall-clock ``ScheduleParams``, the
+    *same* values for both modes. Token streams are asserted
+    bit-identical across modes (preemption must be a pure scheduling
+    change); ``strict`` additionally asserts the trace preempted at
+    least once and met strictly more deadlines with preemption on."""
+    warm_lens = sorted({w.prompt.size for w in items})
+    step_s = None
+    out: dict = {}
+    streams: dict[str, list] = {}
+    for mode, on in (("on", True), ("off", False)):
+        eng = Engine(
+            cfg,
+            mesh,
+            engine_cfg=EngineConfig(
+                max_slots=slots, max_len=max_len, preemption=on
+            ),
+            params=params,
+        )
+        _warm_buckets(eng, warm_lens)
+        # first unarmed replay warms what _warm_buckets cannot reach
+        # (the swap gather/scatter and presence-reseed programs fire on
+        # the first preemption); the second measures steady-state
+        # seconds-per-step for the deadline conversion
+        workloads.replay(eng, items, step_s=None)
+        if step_s is None:
+            _, wall, steps = workloads.replay(eng, items, step_s=None)
+            step_s = wall / max(steps, 1)
+        eng.reset_stats()
+        fins, wall, steps = workloads.replay(eng, items, step_s=step_s)
+        row = workloads.goodput(fins, eng.stats_summary())
+        row["wall_s"] = round(wall, 4)
+        row["steps"] = steps
+        out[mode] = row
+        streams[mode] = [
+            f.tokens.tolist() for f in sorted(fins, key=lambda f: f.uid)
+        ]
+    # preemption may only change WHEN things run, never WHAT they emit
+    assert streams["on"] == streams["off"], (
+        "preemption changed token streams"
+    )
+    out["attainment_gain"] = round(
+        out["on"]["slo_attainment"] - out["off"]["slo_attainment"], 4
+    )
+    if strict:
+        assert out["on"]["preemptions"] > 0, "trace never preempted"
+        assert (
+            out["on"]["slo_attainment"] > out["off"]["slo_attainment"]
+        ), (
+            f"preemption did not raise SLO attainment: "
+            f"on={out['on']['slo_attainment']} "
+            f"off={out['off']['slo_attainment']}"
+        )
+    return out
+
+
+def _measure_goodput(cfg, mesh, params, batch: int, smoke: bool) -> dict:
+    """The three scheduling scenarios over seeded workload traces."""
+    page = cfg.attn_block
+    slots = batch
+
+    # ---- burst: deadline'd high-priority burst on a full pool. The
+    # step counts give >2x margin on both sides of the deadline: with
+    # preemption the burst's e2e is ~burst_gen + a few steps; without,
+    # it queues behind ~background_gen steps.
+    bg_gen, burst_at, dl = (40, 8, 22) if smoke else (96, 12, 48)
+    burst = workloads.poisson_burst(
+        np.random.default_rng(11),
+        vocab=cfg.vocab_size,
+        page=page,
+        n_background=slots,
+        n_burst=slots,
+        burst_step=burst_at,
+        background_gen=bg_gen,
+        burst_gen=6,
+        deadline_steps=dl,
+    )
+    rows = {
+        "burst": _goodput_pair(
+            cfg, mesh, params, slots, 3 * page, burst, strict=True
+        )
+    }
+
+    # ---- long tail: open-loop Poisson arrivals, interactive tier
+    # (priority 1, deadline'd shorts) over a heavy batch tail
+    tail = workloads.long_tail(
+        np.random.default_rng(12),
+        vocab=cfg.vocab_size,
+        page=page,
+        n=12 if smoke else 32,
+        mean_gap_steps=3.0 if smoke else 2.0,
+        short_gen=(3, 8),
+        heavy_gen=bg_gen,
+        deadline_steps=30 if smoke else 40,
+    )
+    rows["long_tail"] = _goodput_pair(
+        cfg, mesh, params, slots, 3 * page, tail
+    )
+
+    # ---- chat: multi-turn conversations, prefix cache on — turn 2+
+    # prompts extend turn 1's history, so admission hits the
+    # decode-written pages the engine indexed when turn 1 finished
+    n_turns = 2 if smoke else 3
+    mk_convs = lambda seed: workloads.chat_turns(
+        np.random.default_rng(seed),
+        vocab=cfg.vocab_size,
+        n_users=slots,
+        n_turns=n_turns,
+        user_tokens=page,
+        # gen page+1: the answer fills the prompt's last page exactly
+        # (written = prompt + gen[:-1]), so whole turns become matchable
+        gen=page + 1,
+    )
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(
+            max_slots=slots,
+            max_len=(2 * n_turns + 1) * page,
+            prefix_cache=True,
+        ),
+        params=params,
+    )
+    # warm with same-shaped different-token conversations: compiles the
+    # partial-prefill buckets the measured turns hit, without seeding
+    # the tree with the measured tokens
+    workloads.replay_chat(eng, mk_convs(998))
+    eng.reset_stats()
+    by_turn, wall, _ = workloads.replay_chat(eng, mk_convs(13))
+    later = [f for t, fs in by_turn.items() if t >= 1 for f in fs]
+    hit = sum(f.prefix_hit_tokens for f in later)
+    plen = sum(int(f.prompt.size) for f in later)
+    ttft = [f.ttft_s for fs in by_turn.values() for f in fs]
+    stats = eng.stats_summary()
+    rows["chat"] = {
+        "turns": n_turns,
+        "users": slots,
+        "wall_s": round(wall, 4),
+        "turn2plus_hit_rate": round(hit / plen, 4) if plen else 0.0,
+        "turn2plus_hit_tokens": hit,
+        "decode_indexed_pages": stats["prefix_cache"][
+            "decode_indexed_pages"
+        ],
+        "ttft_p50_ms": workloads._pct(ttft, 50),
+        "ttft_p95_ms": workloads._pct(ttft, 95),
+    }
+    assert rows["chat"]["turn2plus_hit_rate"] > 0.25, (
+        "chat turns no longer hit decode-indexed pages: "
+        f"{rows['chat']}"
+    )
+    return rows
+
+
 def run(smoke: bool = False) -> None:
     cfg = registry.get_smoke(ARCH, sparse=True)
     batch, prompt_len, gen, repeats = BATCH, PROMPT_LEN, GEN, 3
@@ -398,6 +580,10 @@ def run(smoke: bool = False) -> None:
         cfg, mesh, server.params, batch, smoke, repeats
     )
 
+    # ---- goodput: SLO-aware scheduling scenarios (burst / long-tail /
+    # multi-turn chat) over seeded workload traces
+    good = _measure_goodput(cfg, mesh, server.params, batch, smoke)
+
     payload = {
         "config": {
             "arch": ARCH,
@@ -426,6 +612,7 @@ def run(smoke: bool = False) -> None:
         "decode_by_impl": by_impl,
         "decode_by_sampler": by_sampler,
         "prefix_cache": prefix,
+        "goodput": good,
         "paged_impl_default": base_impl,
         "speedup_vs_server": round(uniform["tok_s"] / server_tok_s, 2),
     }
@@ -470,6 +657,22 @@ def run(smoke: bool = False) -> None:
         f"admission_speedup={prefix['admission_speedup']}x"
         f";hit_rate={prefix['on']['hit_rate']}"
         f";wall_speedup={prefix['wall_speedup']}x",
+    )
+    for name in ("burst", "long_tail"):
+        row = good[name]
+        emit(
+            f"serve_engine/goodput_{name}",
+            1e6 * row["on"]["ttft_p95_ms"],
+            f"slo_on={row['on']['slo_attainment']}"
+            f";slo_off={row['off']['slo_attainment']}"
+            f";preemptions={row['on']['preemptions']}"
+            f";swap_out_bytes={row['on']['swap_out_bytes']}",
+        )
+    emit(
+        "serve_engine/goodput_chat",
+        1e6 * good["chat"]["ttft_p95_ms"],
+        f"turn2plus_hit_rate={good['chat']['turn2plus_hit_rate']}"
+        f";decode_indexed_pages={good['chat']['decode_indexed_pages']}",
     )
 
 

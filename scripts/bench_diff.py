@@ -49,6 +49,26 @@ METRICS = [
     ("sampled/greedy decode", ("decode_by_sampler", "sampled_vs_greedy"), True),
     ("prefix admission speedup", ("prefix_cache", "admission_speedup"), True),
     ("prefix hit rate", ("prefix_cache", "on", "hit_rate"), True),
+    (
+        "goodput[burst] SLO attainment",
+        ("goodput", "burst", "on", "slo_attainment"),
+        True,
+    ),
+    (
+        "goodput[burst] attainment gain",
+        ("goodput", "burst", "attainment_gain"),
+        True,
+    ),
+    (
+        "goodput[long_tail] SLO attainment",
+        ("goodput", "long_tail", "on", "slo_attainment"),
+        True,
+    ),
+    (
+        "goodput[chat] turn-2+ hit rate",
+        ("goodput", "chat", "turn2plus_hit_rate"),
+        True,
+    ),
 ]
 
 

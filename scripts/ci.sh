@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI gate: tier 1 (fast test subset + benchmark smoke + non-fatal drift
+# report) followed by a HARD benchmark-drift gate.
+#
+# tier1.sh keeps `scripts/bench_diff.py` advisory so benchmark noise
+# never blocks local iteration; CI wants the opposite — a working-tree
+# `BENCH_serve.json` that regressed a tracked trajectory (or dropped
+# one entirely) against the committed baseline fails the job. Override
+# the baseline with BENCH_BASELINE_REF (e.g. HEAD~1 to gate a PR that
+# regenerated BENCH_serve.json against the previous PR's numbers).
+#
+#   scripts/ci.sh           # tier1, then bench_diff --strict vs HEAD
+#   BENCH_BASELINE_REF=HEAD~1 scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+scripts/tier1.sh "$@"
+
+echo "ci: scripts/bench_diff.py --strict"
+python scripts/bench_diff.py --strict \
+    --baseline-ref "${BENCH_BASELINE_REF:-HEAD}"

@@ -29,7 +29,12 @@ from repro.configs import registry
 from repro.distributed import sharding
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import transformer as T
-from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving import (
+    Engine,
+    EngineConfig,
+    SamplingParams,
+    ScheduleParams,
+)
 
 
 class Server:
@@ -120,6 +125,22 @@ def main():
                     help="first N tokens of every synthetic prompt are "
                          "a common system prompt (demos --prefix-cache "
                          "hits; 0 = fully independent prompts)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="scheduling priority for the submitted batch "
+                         "(higher admits first and may preempt lower)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="soft end-to-end deadline in seconds (0 = "
+                         "none); reported as SLO attainment")
+    ap.add_argument("--max-queue-wait", type=float, default=0.0,
+                    help="give up (structured rejection) if not "
+                         "admitted within this many seconds (0 = wait "
+                         "forever)")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="disable priority preemption (host-memory "
+                         "page swap)")
+    ap.add_argument("--preempt-min-steps", type=int, default=4,
+                    help="hysteresis: steps a sequence must run after "
+                         "admit/resume before it can be preempted")
     ap.add_argument("--max-skips", type=int, default=64,
                     help="anti-starvation: after this many passes of "
                          "being admitted around, a waiting request "
@@ -198,16 +219,24 @@ def main():
             sampler_candidates=args.sampler_candidates,
             max_skips=args.max_skips,
             prefix_cache=args.prefix_cache,
+            preemption=not args.no_preemption,
+            preempt_min_steps=args.preempt_min_steps,
         ),
         paged_impl=args.paged_impl,
     )
     print(f"paged decode impl: {engine.paged_impl}, sampler: {sp0.kind}")
+    schedule = ScheduleParams(
+        priority=args.priority,
+        deadline_s=args.deadline or None,
+        max_queue_wait_s=args.max_queue_wait or None,
+    )
     for b in range(args.batch):
         # each request gets its own noise stream via a distinct seed
         engine.submit(
             prompts[b],
             args.gen,
             sampling=dataclasses.replace(sp0, seed=args.seed + b),
+            schedule=schedule,
         )
     t0 = time.perf_counter()
     finished = engine.drain()
@@ -223,6 +252,17 @@ def main():
         f"occupancy {s['mean_occupancy']:.2f}, "
         f"{s['mean_prefill_batch']:.1f} req/prefill)"
     )
+    pre = s["preemption"]
+    if pre["preemptions"] or s["rejected"]["total"] or args.deadline:
+        print(
+            f"scheduling: {pre['preemptions']} preemptions "
+            f"({pre.get('out_bytes', 0)} bytes swapped out, "
+            f"{pre.get('in_bytes', 0)} restored), "
+            f"{s['rejected']['total']} rejected, "
+            f"SLO attainment {s['slo']['attainment']:.0%} "
+            f"({s['slo']['met']}/{s['slo']['with_deadline']}), "
+            f"ttft p95 {s['ttft_ms']['p95_ms']:.1f}ms"
+        )
     if args.prefix_cache:
         pc = s["prefix_cache"]
         print(

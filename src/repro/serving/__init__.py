@@ -15,10 +15,18 @@ pages its local/butterfly/global schedule visits.
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.prefix import PrefixCache
-from repro.serving.request import FinishedRequest, Request, SequenceState
+from repro.serving.request import (
+    REJECT_TIMEOUT,
+    REJECT_TOO_LARGE,
+    FinishedRequest,
+    Request,
+    ScheduleParams,
+    SequenceState,
+)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
 from repro.serving.stats import ServeStats
+from repro.serving.swap import SwapManager
 
 __all__ = [
     "Engine",
@@ -27,8 +35,12 @@ __all__ = [
     "PrefixCache",
     "Request",
     "SamplingParams",
+    "ScheduleParams",
     "SequenceState",
     "FinishedRequest",
+    "REJECT_TOO_LARGE",
+    "REJECT_TIMEOUT",
     "Scheduler",
     "ServeStats",
+    "SwapManager",
 ]

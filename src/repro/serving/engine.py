@@ -10,6 +10,19 @@ per-slot positions, idle slots masked to the trash page), and evicts
 finished sequences so their slot and pages are reusable the very next
 step. ``drain()`` loops until the queue and slots are empty.
 
+The waiting queue is *priority-ordered* (``ScheduleParams``: priority
+desc, earliest soft deadline first within a class, FCFS last), and
+admission may **preempt**: when a higher-priority request is blocked on
+slots or pages, the engine swaps out the lowest-priority /
+longest-remaining running sequence — its private KV pages move to host
+memory via an async device→host copy overlapped with the next decode
+step, shared/radix-indexed pages are pinned or parked in place, never
+copied (``repro.serving.swap``) — and the victim's request re-enters the
+queue to resume bit-exactly later. Hysteresis
+(``EngineConfig(preempt_min_steps=)``) keeps one burst from thrashing
+swap: a sequence must run that many steps after each admit/resume before
+it can be victimized.
+
 The decode step is always shaped ``(max_slots,)`` and prefill shapes are
 bucketed to power-of-two page counts *and* power-of-two batch sizes
 (groups split greedily into exact power-of-two chunks, so every call
@@ -32,10 +45,18 @@ from repro.models import transformer as T
 from repro.serving import sampling as sampling_lib
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.prefix import PrefixCache, PrefixStats
-from repro.serving.request import FinishedRequest, Request, SequenceState
+from repro.serving.request import (
+    REJECT_TIMEOUT,
+    REJECT_TOO_LARGE,
+    FinishedRequest,
+    Request,
+    ScheduleParams,
+    SequenceState,
+)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
 from repro.serving.stats import ServeStats
+from repro.serving.swap import SwapManager, SwapStats
 
 __all__ = ["Engine", "EngineConfig"]
 
@@ -54,8 +75,14 @@ class EngineConfig:
     barrier — nothing behind it is admitted until it fits (0 disables
     aging). ``prefix_cache`` turns on radix-tree prefix reuse: admission
     maps cached prompt-prefix pages straight into the new slot's page
-    table and prefills only the uncached suffix
-    (``repro.serving.prefix``)."""
+    table and prefills only the uncached suffix (``repro.serving.prefix``).
+
+    ``preemption`` lets a blocked higher-priority request swap out a
+    running strictly-lower-priority sequence (pages to host memory,
+    ``repro.serving.swap``) instead of waiting for it to finish;
+    ``preempt_min_steps`` is the hysteresis — a sequence may only be
+    victimized after running that many steps since its last
+    admit/resume, so a burst preempts once, not every step."""
 
     def __init__(
         self,
@@ -68,6 +95,8 @@ class EngineConfig:
         sampler_candidates: int = 64,
         max_skips: int = 64,
         prefix_cache: bool = False,
+        preemption: bool = True,
+        preempt_min_steps: int = 4,
     ):
         self.max_slots = max_slots
         self.max_len = max_len
@@ -81,6 +110,10 @@ class EngineConfig:
             raise ValueError("max_skips must be >= 0 (0 disables aging)")
         self.max_skips = max_skips
         self.prefix_cache = prefix_cache
+        self.preemption = preemption
+        if preempt_min_steps < 1:
+            raise ValueError("preempt_min_steps must be >= 1")
+        self.preempt_min_steps = preempt_min_steps
         self.max_prefill_batch = max_prefill_batch or max_slots
         if not 1 <= self.max_prefill_batch <= max_slots:
             raise ValueError(
@@ -107,6 +140,8 @@ class EngineConfig:
             sampler_candidates=self.sampler_candidates or 0,
             max_skips=self.max_skips,
             prefix_cache=self.prefix_cache,
+            preemption=self.preemption,
+            preempt_min_steps=self.preempt_min_steps,
         )
 
 
@@ -119,6 +154,22 @@ def _argmax_first(out):
     pick into the plain jit variants so they, too, sync token ids only."""
     logits, *rest = out
     return (jnp.argmax(logits, axis=-1).astype(jnp.int32), *rest)
+
+
+class _Plan:
+    """One admission pass's outcome: prefill ``groups`` keyed by
+    ``(suffix bucket, prefix-page bucket)``, swapped sequences to
+    ``resume`` (``(req, pinned pages)`` in priority order), the leftover
+    page ``budget``/``free_slots``, and — when a request could not be
+    planned for resource reasons — the highest-priority ``blocked``
+    request, the preemption trigger."""
+
+    def __init__(self):
+        self.groups: dict[tuple[int, int], list] = {}
+        self.resumes: list[tuple[Request, list[int]]] = []
+        self.blocked: Request | None = None
+        self.budget = 0
+        self.free_slots = 0
 
 
 class Engine:
@@ -182,10 +233,15 @@ class Engine:
                 "top_p": np.ones((ms,), np.float32),
                 "rep": np.ones((ms,), np.float32),
                 "key": np.zeros((ms, 2), np.uint32),
+                # prompt length per slot: the decode step derives each
+                # row's sample index in-jit (idx = pos - plen + 1), so
+                # steady-state sampled decode uploads NO per-step
+                # sampler state at all
+                "plen": np.ones((ms,), np.int32),
             }
             # device copy of the packed rows; params change only at
             # admission, so steady-state sampled decode re-uses the
-            # cached arrays instead of re-transferring 5 arrays a step
+            # cached arrays instead of re-transferring 6 arrays a step
             self._samp_dev: dict | None = None
             self._presence = jnp.zeros(
                 (ms, cfg.padded_vocab + 1), jnp.bool_
@@ -197,7 +253,7 @@ class Engine:
             # variant fuses the full sampler. Both decode variants are
             # warmed at init so neither compiles mid-traffic. Presence
             # rides as its own (donatable) arg; the small (slots,) param
-            # arrays are re-packed from host each call.
+            # arrays are device-cached between admissions.
             self._decode = jax.jit(
                 lambda p, c, t, pos, pt: _argmax_first(
                     T.decode_step_paged(
@@ -209,7 +265,14 @@ class Engine:
             self._decode_sampled = jax.jit(
                 lambda p, c, t, pos, pt, samp, pres: T.decode_step_paged(
                     cfg, p, c, t, pos, pt, paged_impl=paged_impl,
-                    sampler={**samp, "presence": pres},
+                    sampler={
+                        **samp,
+                        # per-request sample index, derived in-jit: the
+                        # request in this slot has emitted pos - plen + 1
+                        # tokens (idle slots' values are ignored)
+                        "idx": pos - samp["plen"] + 1,
+                        "presence": pres,
+                    },
                     sampler_candidates=ecfg.sampler_candidates,
                 ),
                 donate_argnums=(1, 6),
@@ -255,6 +318,18 @@ class Engine:
                 ),
                 donate_argnums=(3, 10),
             )
+            # presence rebuild for a *resumed* fancy sequence: one jit'd
+            # scatter of its prompt+generated tokens (padded with the
+            # absorb column V) into the new slot's row — equivalent to
+            # the presence the running sequence had accumulated
+            npad = cfg.padded_vocab
+            self._seed_presence = jax.jit(
+                lambda pres, slot, toks: pres.at[slot].set(False)
+                .at[slot, toks]
+                .set(True),
+                donate_argnums=(0,),
+            )
+            self._presence_pad = npad  # absorb column for padding
             # One throwaway all-idle decode step (every slot masked to the
             # trash page): compiles the decode program up front AND leaves
             # the pools with the aval/layout the decode step produces —
@@ -273,7 +348,7 @@ class Engine:
                 zeros,
                 zeros,
                 table0,
-                self._decode_sampler(np.zeros((ms,), np.int32)),
+                self._decode_sampler(),
                 self._presence,
             )
         self.scheduler = Scheduler(ecfg.max_slots)
@@ -282,6 +357,23 @@ class Engine:
         # opportunistically and are evicted (LRU) the moment the
         # allocator wants them back — admission is never blocked
         self._prefix = PrefixCache(self.kv) if ecfg.prefix_cache else None
+        # host-memory page swap for preemption (always constructed: the
+        # machinery is inert until a preemption actually fires)
+        self.swap = SwapManager(
+            self.kv,
+            page_in_tree=(
+                self._prefix.page_in_tree if self._prefix else None
+            ),
+        )
+        # uid -> (SequenceState, SwapRecord) for swapped-out sequences;
+        # their Requests sit back in the scheduler's waiting queue and
+        # resume (swap-in) instead of prefilling when re-admitted
+        self._swapped: dict[int, tuple[SequenceState, object]] = {}
+        # swap records whose device→host staging copy is still in
+        # flight; finalized right after the next decode step
+        self._pending_swaps: list = []
+        # structured rejections awaiting delivery by the next step()
+        self._rejected: list[FinishedRequest] = []
         # slot -> total pages its sequence may ever need (prompt + decode
         # growth). Only pages_for_len(plen) are allocated at admission;
         # the remainder is a *reservation* the admission budget must not
@@ -302,25 +394,30 @@ class Engine:
         *,
         eos_id: int | None = None,
         sampling: SamplingParams | None = None,
+        schedule: ScheduleParams | None = None,
     ) -> int:
         """Enqueue one request; returns its uid. ``sampling`` attaches
-        per-request decoding knobs (default: exact greedy)."""
+        per-request decoding knobs (default: exact greedy); ``schedule``
+        attaches scheduling knobs (priority / soft deadline / max queue
+        wait; default: best-effort FCFS).
+
+        A request that could *never* fit the engine's geometry is not
+        an exception: it finishes with ``finish_reason "rejected"`` /
+        ``reject_reason REJECT_TOO_LARGE``, delivered by the next
+        ``step()`` — callers distinguish it from a queue-wait timeout
+        (``REJECT_TIMEOUT``) by the reason enum."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size > self.ecfg.max_len:
-            raise ValueError(
-                f"prompt of {prompt.size} tokens exceeds max_len "
-                f"{self.ecfg.max_len}"
-            )
-        lifetime = self.kv.pages_for_len(
-            min(prompt.size + max_new_tokens - 1, self.ecfg.max_len)
+        schedule = schedule or ScheduleParams()
+        self._uid += 1
+        req = Request(
+            self._uid,
+            prompt,
+            max_new_tokens,
+            eos_id=eos_id,
+            sampling=sampling or SamplingParams(),
+            schedule=schedule,
+            submit_s=time.perf_counter(),
         )
-        if lifetime > self.kv.n_pages - 1:
-            # reject what could never admit: with aging on, an
-            # impossible request would eventually barrier the queue
-            raise ValueError(
-                f"request needs {lifetime} lifetime pages but the pool "
-                f"has {self.kv.n_pages - 1} (EngineConfig(n_pages=...))"
-            )
         cap = self.ecfg.sampler_candidates
         if (
             sampling is not None
@@ -333,20 +430,56 @@ class Engine:
                 f"candidate cap {cap} "
                 "(EngineConfig(sampler_candidates=...))"
             )
-        self._uid += 1
-        self.scheduler.submit(
-            Request(
-                self._uid,
-                prompt,
-                max_new_tokens,
-                eos_id=eos_id,
-                sampling=sampling or SamplingParams(),
-            )
+        lifetime = self.kv.pages_for_len(
+            min(prompt.size + max_new_tokens - 1, self.ecfg.max_len)
         )
+        if (
+            prompt.size > self.ecfg.max_len
+            or lifetime > self.kv.n_pages - 1
+        ):
+            # structured rejection for what could never admit: with
+            # aging on, an impossible request would eventually barrier
+            # the queue forever
+            self._rejected.append(self._reject(req, REJECT_TOO_LARGE))
+            return self._uid
+        self.scheduler.submit(req)
         return self._uid
 
+    def _reject(self, req: Request, reason: str) -> FinishedRequest:
+        self.stats.record_reject(
+            reason, had_deadline=req.schedule.deadline_s is not None
+        )
+        return FinishedRequest(
+            uid=req.uid,
+            prompt=req.prompt,
+            tokens=np.zeros((0,), np.int32),
+            finish_reason="rejected",
+            reject_reason=reason,
+            admit_step=-1,
+            finish_step=self._step_idx,
+            schedule=req.schedule,
+        )
+
+    def _expire_waiting(self, finished: list[FinishedRequest]) -> None:
+        """Queue-wait timeouts: a never-admitted request whose
+        ``max_queue_wait_s`` has elapsed gives up with a structured
+        rejection. Swapped-out sequences are exempt — they have already
+        run; their re-queued request always resumes eventually."""
+        now = time.perf_counter()
+        for req in list(self.scheduler.waiting):
+            wait = req.schedule.max_queue_wait_s
+            if (
+                wait is not None
+                and req.uid not in self._swapped
+                and now - req.submit_s > wait
+            ):
+                self.scheduler.remove(req)
+                finished.append(self._reject(req, REJECT_TIMEOUT))
+
     # ---- sampler packing ---------------------------------------------
-    def _bind_sampler(self, slot: int, sp: SamplingParams) -> None:
+    def _bind_sampler(
+        self, slot: int, sp: SamplingParams, plen: int
+    ) -> None:
         """Write one request's sampling params into its slot's rows.
         The PRNG base key depends only on the request's seed — never on
         the slot, step, or co-batched requests — so seeded runs are
@@ -356,21 +489,23 @@ class Engine:
         self._samp["top_p"][slot] = sp.top_p
         self._samp["rep"][slot] = sp.repetition_penalty
         self._samp["key"][slot] = sampling_lib.base_key_data(sp.seed)
+        self._samp["plen"][slot] = plen
         self._samp_dev = None  # rows changed: repack at next use
         if sp.is_plain:
             self._fancy_slots.discard(slot)
         else:
             self._fancy_slots.add(slot)
 
-    def _decode_sampler(self, idx: np.ndarray) -> dict:
-        """Pack the slot-indexed sampling state for one decode step.
-        ``idx`` (slots,) int32: tokens each slot's request has emitted so
-        far (its per-request sample index)."""
+    def _decode_sampler(self) -> dict:
+        """The slot-indexed sampling state for decode steps. Fully
+        device-cached between admissions — the per-request sample index
+        is derived in-jit from the step's positions (idx = pos - plen +
+        1), so steady-state sampled decode transfers nothing."""
         if self._samp_dev is None:
             self._samp_dev = {
                 k: jnp.asarray(v) for k, v in self._samp.items()
             }
-        return {**self._samp_dev, "idx": jnp.asarray(idx)}
+        return self._samp_dev
 
     def _prefill_sampler(self, states: list[SequenceState]) -> dict:
         """Pack per-request sampling params for one admission group
@@ -460,7 +595,13 @@ class Engine:
         nothing this plan relies on can be evicted or freed before the
         admission lands. Returns (pinned pages, admission cost in
         pages): fresh pages the request still needs, plus the parked
-        pages the pin just consumed from the evictable budget."""
+        pages the pin just consumed from the evictable budget.
+
+        Works for *resumes* too: a swapped-out sequence's resident
+        prefix (its swap pins keep the shared pages live, so the tree
+        still maps them) comes back through the same walk, and the cost
+        formula — lifetime minus resident — prices exactly the fresh
+        pages the restore plus future decode growth still need."""
         if self._prefix is None:
             return [], self._lifetime_pages(req)
         pages = self._prefix.match(req.prompt)
@@ -477,59 +618,194 @@ class Engine:
         for p in pages:
             self.kv.unpin(p)
 
-    def _plan_admission(self) -> dict[tuple[int, int], list]:
-        """One bounded-lookahead pass over the waiting queue: group the
-        first ``lookahead`` requests into same-bucket prefill waves that
-        fit the current slot and page budget. A request whose pages don't
-        fit is *skipped* (not blocking): later, smaller requests in the
-        window may still be admitted this step — unless the skipped
-        request has already been admitted around ``max_skips`` times, in
-        which case the pass stops at it (anti-starvation barrier). The
-        budget covers each request's whole lifetime (prompt + decode
-        growth), so admission can never oversubscribe into a mid-decode
-        out-of-pages crash; with the prefix cache on it counts only
-        *uncached* pages (hit pages are shared, parked pages are already
-        resident) plus every parked page as evictable headroom.
+    def _plan_admission(self) -> _Plan:
+        """One bounded-lookahead pass over the waiting queue (priority
+        order): group the first ``lookahead`` requests into same-bucket
+        prefill waves — or resume entries for swapped-out sequences —
+        that fit the current slot and page budget. A request whose pages
+        don't fit is *skipped* (not blocking): later, smaller requests
+        in the window may still be admitted this step — unless the
+        skipped request has already been admitted around ``max_skips``
+        times, in which case the pass stops at it (anti-starvation
+        barrier). The budget covers each request's whole lifetime
+        (prompt + decode growth), so admission can never oversubscribe
+        into a mid-decode out-of-pages crash; with the prefix cache on
+        it counts only *uncached* pages (hit pages are shared, parked
+        pages are already resident) plus every parked page as evictable
+        headroom.
 
-        Groups are keyed ``(suffix bucket, prefix-page bucket)``; each
-        entry carries ``(req, pinned prefix pages)``."""
-        groups: dict[tuple[int, int], list] = {}
-        free_slots = self.scheduler.num_free_slots
-        if free_slots == 0:
-            return groups
-        budget = self.kv.free_pages - self._reserved_pages()
+        The highest-priority request that could not be planned is
+        reported as ``plan.blocked`` — ``step()`` hands it to the
+        preemption path."""
+        plan = _Plan()
+        plan.free_slots = self.scheduler.num_free_slots
+        plan.budget = self.kv.free_pages - self._reserved_pages()
         if self._prefix is not None:
-            budget += self._prefix.evictable_pages()
+            plan.budget += self._prefix.evictable_pages()
         skipped: list[tuple[int, Request]] = []
         last_planned = -1
         for wi, req in enumerate(
             self.scheduler.peek_admissible(self.ecfg.lookahead)
         ):
-            if free_slots == 0:
+            if plan.free_slots == 0:
+                if plan.blocked is None:
+                    plan.blocked = req
                 break
             pages, cost = self._match_and_pin(req)
-            if cost > budget:
+            if cost > plan.budget:
                 self._unpin(pages)
                 skipped.append((wi, req))
+                if plan.blocked is None:
+                    plan.blocked = req
                 if (
                     self.ecfg.max_skips
                     and self.scheduler.skip_count(req) >= self.ecfg.max_skips
                 ):
                     break  # starved request: stop admitting around it
                 continue
-            suffix = req.prompt.size - len(pages) * self.kv.page
-            key = (self._bucket(suffix), self._pre_bucket(len(pages)))
-            groups.setdefault(key, []).append((req, pages))
-            free_slots -= 1
-            budget -= cost
+            if req.uid in self._swapped:
+                plan.resumes.append((req, pages))
+            else:
+                suffix = req.prompt.size - len(pages) * self.kv.page
+                key = (self._bucket(suffix), self._pre_bucket(len(pages)))
+                plan.groups.setdefault(key, []).append((req, pages))
+            plan.free_slots -= 1
+            plan.budget -= cost
             last_planned = wi
         # a request ages only when this pass admitted *around* it
         # (someone behind it in the window got a slot)
         self.scheduler.note_skips(
             [req for wi, req in skipped if wi < last_planned]
         )
-        return groups
+        return plan
 
+    def _unplan(self, plan: _Plan) -> None:
+        """Drop every pin a plan holds (it is being recomputed after a
+        preemption changed the resource picture)."""
+        for plans in plan.groups.values():
+            for _, pages in plans:
+                self._unpin(pages)
+        for _, pages in plan.resumes:
+            self._unpin(pages)
+
+    # ---- preemption --------------------------------------------------
+    def _swap_pin_len(self, state: SequenceState) -> int:
+        """How many of a victim's leading pages swap-out would pin in
+        place (shared with other slots) rather than copy — capped at the
+        radix match limit so a resume's re-match always covers them."""
+        owned = self.kv.owned_pages(state.slot)
+        cap = min((state.plen - 1) // self.kv.page, len(owned))
+        n = 0
+        while n < cap and self.kv.refcount(owned[n]) > 1:
+            n += 1
+        return n
+
+    def _maybe_preempt(self, plan: _Plan) -> bool:
+        """Try to unblock ``plan.blocked`` by swapping out running
+        sequences of *strictly lower* priority (lowest priority first,
+        longest-remaining first within a class). Hysteresis: only
+        sequences that have run ``preempt_min_steps`` since their last
+        admit/resume are candidates, so one burst cannot thrash swap.
+        Victims are only swapped if they collectively unblock the
+        request — pointless preemptions are never issued. Returns True
+        if anything was swapped (the caller re-plans)."""
+        req = plan.blocked
+        if req is None or not self.ecfg.preemption:
+            return False
+        pr = req.schedule.priority
+        cands = [
+            st_
+            for st_ in self.scheduler.active()
+            if st_.request.schedule.priority < pr
+            and self._step_idx - st_.resume_step
+            >= self.ecfg.preempt_min_steps
+        ]
+        if not cands:
+            return False
+        cands.sort(
+            key=lambda st_: (
+                st_.request.schedule.priority,
+                -st_.remaining,
+            )
+        )
+        pages, cost = self._match_and_pin(req)
+        self._unpin(pages)
+        budget, free_slots = plan.budget, plan.free_slots
+        victims: list[SequenceState] = []
+        for v in cands:
+            if free_slots >= 1 and cost <= budget:
+                break
+            # swapping v frees its private pages (copied or parked) and
+            # releases its unallocated decode-growth reservation; only
+            # its pinned shared prefix stays unavailable
+            need = self._page_need.get(
+                v.slot, self.kv.pages_owned(v.slot)
+            )
+            budget += need - self._swap_pin_len(v)
+            free_slots += 1
+            victims.append(v)
+        if free_slots < 1 or cost > budget:
+            return False  # even every candidate would not unblock it
+        for v in victims:
+            self._preempt(v)
+        return True
+
+    def _preempt(self, state: SequenceState) -> None:
+        """Swap one running sequence out to host memory and re-queue its
+        request for a later bit-exact resume."""
+        slot = state.slot
+        record = self.swap.swap_out(
+            slot, max_pin=(state.plen - 1) // self.kv.page
+        )
+        self.scheduler.evict(slot)
+        self._page_need.pop(slot, None)
+        self._fancy_slots.discard(slot)
+        state.preemptions += 1
+        self._swapped[state.request.uid] = (state, record)
+        self._pending_swaps.append(record)
+        self.scheduler.submit(state.request)
+        self.stats.record_preemption()
+
+    def _resume(self, req: Request, pages: list[int]) -> SequenceState:
+        """Swap a preempted sequence back in: adopt the re-matched
+        resident prefix (``pages``, pinned by the plan), allocate fresh
+        pages for the rest, scatter the host copies, and rebind the
+        slot-indexed sampler/presence state. The token stream continues
+        bit-exactly: KV bytes round-trip unchanged, and the sampler's
+        noise depends only on (seed, sample index)."""
+        state, record = self._swapped.pop(req.uid)
+        assert self.scheduler.resume(state, request=req) is not None
+        slot = state.slot
+        self._page_need[slot] = self._lifetime_pages(req)
+        self._bind_sampler(slot, req.sampling, state.plen)
+        if pages:
+            self.kv.adopt(slot, pages)
+        self._alloc(slot, record.n_logical * self.kv.page - 1)
+        self.swap.swap_in(record, slot, n_resident=len(pages))
+        state.resume_step = self._step_idx
+        state.prefix_hit_tokens = max(
+            state.prefix_hit_tokens, len(pages) * self.kv.page
+        )
+        if not req.sampling.is_plain:
+            # rebuild the slot's presence row: prompt + generated so
+            # far, padded into the absorb column
+            toks = np.full(
+                (self.ecfg.max_len + 1,), self._presence_pad, np.int32
+            )
+            seen = np.concatenate(
+                [req.prompt, np.asarray(state.generated, np.int32)]
+            )[: self.ecfg.max_len + 1]
+            toks[: seen.size] = seen
+            with self.mesh:
+                self._presence = self._seed_presence(
+                    self._presence,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(toks),
+                )
+        self.stats.record_resume()
+        return state
+
+    # ---- admission ---------------------------------------------------
     def _admit_group(
         self, plans: list, s: int, npre: int
     ) -> list[SequenceState]:
@@ -566,10 +842,11 @@ class Engine:
         for i, (req, pages) in enumerate(plans):
             state = self.scheduler.admit(self._step_idx, request=req)
             assert state is not None
+            state.resume_step = self._step_idx
             hit = len(pages) * self.kv.page
             state.prefix_hit_tokens = hit
             self._page_need[state.slot] = self._lifetime_pages(req)
-            self._bind_sampler(state.slot, req.sampling)
+            self._bind_sampler(state.slot, req.sampling, state.plen)
             if pages:
                 self.kv.adopt(state.slot, pages)
             self._alloc(state.slot, state.plen - 1)
@@ -644,6 +921,7 @@ class Engine:
                 )
             toks = np.asarray(jax.block_until_ready(toks_dev))
         dt = time.perf_counter() - t0
+        now = time.perf_counter()
         self.stats.record_prefill(
             int(plens.sum()),
             dt,
@@ -654,6 +932,8 @@ class Engine:
         for i, state in enumerate(states):
             state.generated.append(int(toks[i]))
             state.pos = state.plen
+            state.first_token_s = now
+            self.stats.record_ttft(now - state.request.submit_s)
             if self._prefix is not None:
                 # index the prompt's full pages (hits refresh their LRU
                 # tick; new full pages — suffix included — become
@@ -666,15 +946,26 @@ class Engine:
 
     # ---- stepping ----------------------------------------------------
     def step(self) -> list[FinishedRequest]:
-        """One scheduler iteration: admit (batched) -> decode -> evict.
+        """One scheduler iteration: admit (batched, possibly after
+        preempting) -> resume swapped sequences -> decode -> evict.
 
         Same-bucket groups are split greedily into power-of-two chunks
         (4 -> one call of 4; 3 -> 2+1) capped at ``max_prefill_batch``:
         every chunk exactly fills its compiled (N, S) program, so batching
         never pays for padded batch rows."""
-        finished: list[FinishedRequest] = []
+        finished: list[FinishedRequest] = list(self._rejected)
+        self._rejected.clear()
+        self._expire_waiting(finished)
+        plan = self._plan_admission()
+        if self._maybe_preempt(plan):
+            # the resource picture changed: recompute the whole pass so
+            # the blocked high-priority request plans first
+            self._unplan(plan)
+            plan = self._plan_admission()
+        for req, pages in plan.resumes:
+            self._resume(req, pages)
         cap = self.ecfg.max_prefill_batch
-        for (s, npre), plans in self._plan_admission().items():
+        for (s, npre), plans in plan.groups.items():
             i = 0
             while i < len(plans):
                 n = 1 << (min(len(plans) - i, cap).bit_length() - 1)
@@ -692,13 +983,11 @@ class Engine:
         if active:
             tokens = np.zeros((self.ecfg.max_slots,), np.int32)
             positions = np.zeros((self.ecfg.max_slots,), np.int32)
-            idx = np.zeros((self.ecfg.max_slots,), np.int32)
             for st_ in active:
                 self._ensure_writable(st_.slot, st_.pos)
                 self._alloc(st_.slot, st_.pos)
                 tokens[st_.slot] = st_.generated[-1]
                 positions[st_.slot] = st_.pos
-                idx[st_.slot] = len(st_.generated)
             t0 = time.perf_counter()
             with self.mesh:
                 # token picked inside the jit'd step either way: the one
@@ -713,7 +1002,7 @@ class Engine:
                             jnp.asarray(tokens),
                             jnp.asarray(positions),
                             jnp.asarray(self.kv.page_table),
-                            self._decode_sampler(idx),
+                            self._decode_sampler(),
                             self._presence,
                         )
                     )
@@ -737,6 +1026,11 @@ class Engine:
                     finished.append(self._finish(st_))
                 elif st_.pos >= self.ecfg.max_len:
                     finished.append(self._finish(st_, reason="capacity"))
+        # the decode step has been overlapping any in-flight swap-out
+        # transfers; land them on the host and drop the device staging
+        for record in self._pending_swaps:
+            self.swap.finalize(record)
+        self._pending_swaps.clear()
         self._step_idx += 1
         return finished
 
@@ -750,6 +1044,23 @@ class Engine:
         # allocated pages — and are counted for the stats.
         need = self._page_need.pop(state.slot, 0)
         reclaimed = max(0, need - self.kv.pages_owned(state.slot))
+        if self._prefix is not None:
+            # index the decode-written pages too (full blocks only): the
+            # next turn of a multi-turn conversation prompts with this
+            # sequence's history and hits these pages. The last generated
+            # token is returned but never written back, so the indexed
+            # content is prompt + generated[:-1].
+            written = np.concatenate(
+                [
+                    state.request.prompt,
+                    np.asarray(state.generated[:-1], np.int32),
+                ]
+            )
+            self.stats.record_decode_indexed(
+                self._prefix.insert(
+                    written, self.kv.page_table[state.slot]
+                )
+            )
         self.scheduler.evict(state.slot)
         # radix-indexed pages are parked (refcount 0, device-resident)
         # instead of freed: a future prompt sharing the prefix maps them
@@ -761,9 +1072,6 @@ class Engine:
         self._fancy_slots.discard(state.slot)
         if reclaimed:
             self.stats.record_reclaimed(reclaimed)
-        self.stats.record_finish(
-            kind=state.request.sampling.kind, tokens=len(state.generated)
-        )
         if reason is None:
             eos = state.request.eos_id
             reason = (
@@ -771,21 +1079,38 @@ class Engine:
                 if eos is not None and state.generated[-1] == eos
                 else "length"
             )
-        return FinishedRequest(
-            uid=state.request.uid,
-            prompt=state.request.prompt,
+        now = time.perf_counter()
+        req = state.request
+        fin = FinishedRequest(
+            uid=req.uid,
+            prompt=req.prompt,
             tokens=np.asarray(state.generated, np.int32),
             finish_reason=reason,
             admit_step=state.admit_step,
             finish_step=self._step_idx,
             prefix_hit_tokens=state.prefix_hit_tokens,
+            preemptions=state.preemptions,
+            ttft_s=(
+                state.first_token_s - req.submit_s
+                if state.first_token_s is not None
+                else None
+            ),
+            e2e_s=now - req.submit_s,
+            schedule=req.schedule,
         )
+        self.stats.record_finish(
+            kind=req.sampling.kind,
+            tokens=len(state.generated),
+            slo_met=fin.slo_met,
+        )
+        return fin
 
     def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:
-        """Step until every submitted request has finished."""
+        """Step until every submitted request has finished (including
+        structured rejections awaiting delivery)."""
         out: list[FinishedRequest] = []
         steps = 0
-        while not self.scheduler.idle:
+        while not self.scheduler.idle or self._rejected:
             out.extend(self.step())
             steps += 1
             if (
@@ -802,11 +1127,13 @@ class Engine:
         """Zero the per-run counters (benchmark repeats); the radix
         tree's contents survive — only the numbers reset."""
         self.stats = ServeStats()
+        self.swap.stats = SwapStats()
         if self._prefix is not None:
             self._prefix.stats = PrefixStats()
 
     def stats_summary(self) -> dict:
         out = self.stats.summary()
+        out["preemption"].update(self.swap.stats.snapshot())
         if self._prefix is not None:
             out["prefix_cache"].update(self._prefix.stats.snapshot())
             out["prefix_cache"]["enabled"] = True

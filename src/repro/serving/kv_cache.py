@@ -114,6 +114,11 @@ class PagedKVCache:
     def pages_owned(self, slot: int) -> int:
         return len(self._owned.get(slot, []))
 
+    def owned_pages(self, slot: int) -> list[int]:
+        """The slot's physical pages in logical order (a copy — the
+        swap manager snapshots this before freeing the slot)."""
+        return list(self._owned.get(slot, []))
+
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
 

@@ -1,21 +1,40 @@
-"""Slot-based continuous-batching scheduler.
+"""Slot-based continuous-batching scheduler with priority admission.
 
-FCFS admission into a fixed set of cache slots: sequences are admitted the
+Admission into a fixed set of cache slots: sequences are admitted the
 moment a slot (and its KV pages) frees up and evicted the step they
 finish — no full-batch barrier, no recompilation (the decode step is
 always shaped (max_slots,), idle slots ride along masked).
+
+The waiting queue is a *priority* queue ordered by ``(priority desc,
+absolute deadline asc, uid asc)``: higher-priority requests admit first,
+earliest-deadline-first breaks ties within a priority class, and FCFS
+(monotone uids) breaks the rest — all-default ``ScheduleParams`` traffic
+degenerates to the exact FCFS order the engine always had. A preempted
+sequence's request re-enters the same queue (its old uid puts it at the
+*front* of its class, so a resumed victim never queue-jumps itself).
+
 ``peek_admissible(k)`` exposes a bounded lookahead window so the engine
 can batch same-bucket prefills and admit around an oversized
-head-of-queue request.
+head-of-queue request; ``resume`` re-binds a swapped-out sequence's
+preserved ``SequenceState`` to a fresh slot.
 """
 
 from __future__ import annotations
 
-from collections import deque
+import bisect
 
 from repro.serving.request import Request, SequenceState
 
 __all__ = ["Scheduler"]
+
+
+def _order_key(req: Request) -> tuple:
+    deadline = (
+        req.submit_s + req.schedule.deadline_s
+        if req.schedule.deadline_s is not None
+        else float("inf")
+    )
+    return (-req.schedule.priority, deadline, req.uid)
 
 
 class Scheduler:
@@ -23,7 +42,9 @@ class Scheduler:
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         self.max_slots = max_slots
-        self.waiting: deque[Request] = deque()
+        # kept sorted by _order_key (bisect.insort on submit): index 0 is
+        # the highest-priority / most-urgent waiting request
+        self.waiting: list[Request] = []
         self.slots: list[SequenceState | None] = [None] * max_slots
         # anti-starvation aging: admission passes that admitted *around*
         # each still-waiting request (keyed by uid; cleared on admit)
@@ -31,12 +52,12 @@ class Scheduler:
 
     # ---- queue -------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.waiting.append(req)
+        bisect.insort(self.waiting, req, key=_order_key)
 
     def peek_admissible(self, k: int) -> list[Request]:
         """Bounded-lookahead admission window: the first ``min(k,
-        len(waiting))`` queued requests in FCFS order, not popped. The
-        engine filters this window by slot/page budget and may admit
+        len(waiting))`` queued requests in priority order, not popped.
+        The engine filters this window by slot/page budget and may admit
         later (smaller) requests past an oversized head-of-queue one.
         ``k`` bounds how many requests each admission pass may consider
         (and thus admit past the head). Starvation is bounded by aging:
@@ -45,8 +66,7 @@ class Scheduler:
         ``skip_count`` reaches ``EngineConfig(max_skips=)``."""
         if k < 1:
             raise ValueError("lookahead k must be >= 1")
-        n = min(k, len(self.waiting))
-        return [self.waiting[i] for i in range(n)]
+        return self.waiting[: min(k, len(self.waiting))]
 
     def note_skips(self, reqs: list[Request]) -> None:
         """Record one admission pass that admitted *around* each of
@@ -56,6 +76,21 @@ class Scheduler:
 
     def skip_count(self, req: Request) -> int:
         return self._skips.get(req.uid, 0)
+
+    def remove(self, request: Request) -> None:
+        """Drop a waiting request (queue-wait timeout / structured
+        rejection) without binding it to a slot."""
+        self._pop_waiting(request)
+        self._skips.pop(request.uid, None)
+
+    def _pop_waiting(self, request: Request) -> Request:
+        # remove by identity: dataclass equality would compare numpy
+        # prompt arrays (ambiguous-truth ValueError on lookalikes)
+        for i, r in enumerate(self.waiting):
+            if r is request:
+                del self.waiting[i]
+                return r
+        raise ValueError("request is not in the waiting queue")
 
     # ---- slots -------------------------------------------------------
     def free_slot(self) -> int | None:
@@ -73,27 +108,36 @@ class Scheduler:
     ) -> SequenceState | None:
         """Bind a waiting request to a free slot (None if neither).
 
-        ``request=None`` takes the head of the queue (FCFS); passing a
-        specific request (one returned by ``peek_admissible``) removes it
-        from wherever it sits in the queue — that's how the engine's
-        lookahead admits around an oversized head-of-line request."""
+        ``request=None`` takes the head of the queue (highest priority,
+        then FCFS); passing a specific request (one returned by
+        ``peek_admissible``) removes it from wherever it sits in the
+        queue — that's how the engine's lookahead admits around an
+        oversized head-of-line request."""
         slot = self.free_slot()
         if slot is None or not self.waiting:
             return None
         if request is None:
-            req = self.waiting.popleft()
+            req = self.waiting.pop(0)
         else:
-            # remove by identity: dataclass equality would compare numpy
-            # prompt arrays (ambiguous-truth ValueError on lookalikes)
-            for i, r in enumerate(self.waiting):
-                if r is request:
-                    del self.waiting[i]
-                    break
-            else:
-                raise ValueError("request is not in the waiting queue")
-            req = request
+            req = self._pop_waiting(request)
         self._skips.pop(req.uid, None)
         state = SequenceState(request=req, slot=slot, admit_step=step)
+        self.slots[slot] = state
+        return state
+
+    def resume(
+        self, state: SequenceState, *, request: Request
+    ) -> SequenceState | None:
+        """Re-bind a swapped-out sequence's preserved state to a free
+        slot, removing its re-queued request from the waiting queue.
+        The state keeps its progress (pos/generated/admit_step); only
+        the slot binding changes. None if no slot is free."""
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        self._pop_waiting(request)
+        self._skips.pop(request.uid, None)
+        state.slot = slot
         self.slots[slot] = state
         return state
 

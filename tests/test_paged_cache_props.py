@@ -26,7 +26,7 @@ except ImportError:  # pragma: no cover - dev dep optional
     HAVE_HYPOTHESIS = False
 
 from repro.configs import registry
-from repro.serving import PagedKVCache
+from repro.serving import PagedKVCache, SwapManager
 
 SLOTS, PAGES_PER_SLOT, PAGE = 3, 4, 4
 MAX_LEN = PAGES_PER_SLOT * PAGE
@@ -40,33 +40,42 @@ def _tiny_cfg():
     )
 
 
-def _check_invariants(kv: PagedKVCache) -> None:
+def _check_invariants(
+    kv: PagedKVCache, pins: dict[int, int] | None = None
+) -> None:
+    """``pins``: outstanding swap pins per page (page -> count) — a
+    swapped-out sequence's shared prefix is kept live by references
+    that no slot owns until resume. None asserts the no-pins steady
+    state (refcount == number of owning slots exactly)."""
+    pins = {p: n for p, n in (pins or {}).items() if n > 0}
     owned = [p for pages in kv._owned.values() for p in pages]
     counts: dict[int, int] = {}
     for p in owned:
         counts[p] = counts.get(p, 0) + 1
     # the trash page is never owned, freed, parked or refcounted
     assert 0 not in owned and 0 not in kv._free and 0 not in kv._cached
-    assert kv._ref[0] == 0
-    # refcounts are never negative and (at op boundaries, with no
-    # dangling pins) equal the number of slots mapping each page — in
-    # particular a refcount-1 page is owned by exactly ONE slot
+    assert kv._ref[0] == 0 and 0 not in pins
+    # refcounts are never negative and (at op boundaries) equal the
+    # number of slots mapping each page plus its outstanding swap pins
+    # — in particular a refcount-1 unpinned page is owned by exactly
+    # ONE slot
     assert (kv._ref >= 0).all()
     for p in range(1, kv.n_pages):
-        assert kv._ref[p] == counts.get(p, 0)
+        assert kv._ref[p] == counts.get(p, 0) + pins.get(p, 0)
     # no slot maps the same page twice
     for pages in kv._owned.values():
         assert len(pages) == len(set(pages))
-    # conservation: free ∪ owned ∪ cached == pool, pairwise disjoint
-    assert set(kv._free) | set(counts) | kv._cached == set(
+    # conservation: free ∪ owned ∪ cached ∪ pin-only == pool, disjoint
+    pin_only = {p for p in pins if p not in counts}
+    assert set(kv._free) | set(counts) | kv._cached | pin_only == set(
         range(1, kv.n_pages)
     )
-    assert not set(kv._free) & set(counts)
-    assert not set(kv._free) & kv._cached
+    assert not set(kv._free) & (set(counts) | kv._cached | pin_only)
     assert not set(counts) & kv._cached
+    assert not kv._cached & pin_only
     assert len(kv._free) == len(set(kv._free))
     assert kv.free_pages == (
-        kv.n_pages - 1 - len(counts) - len(kv._cached)
+        kv.n_pages - 1 - len(counts) - len(kv._cached) - len(pin_only)
     )
     # page_table rows mirror the owned lists, trash-padded
     for slot in range(kv.max_slots):
@@ -133,11 +142,18 @@ def test_alloc_free_roundtrip_seeded(seed):
 
 def _run_share_trace(ops) -> None:
     """Extended trace over the refcounted API: share (pin + adopt),
-    copy-on-write splits, radix parking (free with a keep hook) and LRU
-    eviction, with the full conservation/refcount invariant checked
-    after every op. ``tree`` models the prefix cache's page index."""
+    copy-on-write splits, radix parking (free with a keep hook), LRU
+    eviction, and host-memory swap round trips (swap_out pins the
+    shared prefix, evacuates the rest, frees the slot; swap_in adopts
+    the pinned prefix back and restores the host pages — mirroring the
+    engine's preemption flow), with the full conservation/refcount
+    invariant — including outstanding swap pins — checked after every
+    op. ``tree`` models the prefix cache's page index."""
     kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
     tree: set[int] = set()
+    sm = SwapManager(kv, page_in_tree=lambda p: p in tree)
+    records: list = []  # outstanding swap-outs
+    pins: dict[int, int] = {}  # page -> live swap pins
     for op, slot, arg in ops:
         if op == "alloc":
             before = list(kv._owned.get(slot, []))
@@ -178,17 +194,58 @@ def _run_share_trace(ops) -> None:
                 victim = sorted(kv._cached)[arg % len(kv._cached)]
                 kv.release_cached(victim)
                 tree.discard(victim)
-        _check_invariants(kv)
+        elif op == "swap_out":
+            if kv._owned.get(slot):
+                rec = sm.swap_out(
+                    slot, max_pin=arg % (PAGES_PER_SLOT + 1)
+                )
+                sm.finalize(rec)
+                for p in rec.pin_pages:
+                    pins[p] = pins.get(p, 0) + 1
+                records.append(rec)
+        elif op == "swap_in":
+            tgt = next(
+                (s for s in range(SLOTS) if not kv._owned.get(s)), None
+            )
+            if records and tgt is not None:
+                rec = records[arg % len(records)]
+                n_pin = len(rec.pin_pages)
+                if kv.free_pages >= rec.n_logical - n_pin:
+                    records.remove(rec)
+                    # the engine's resume: the radix re-match pins the
+                    # resident prefix, adopt turns those pins into the
+                    # slot's references, fresh pages take the host copies
+                    for p in rec.pin_pages:
+                        kv.incref(p)
+                    kv.adopt(tgt, list(rec.pin_pages))
+                    kv.alloc_upto(tgt, rec.n_logical * PAGE - 1)
+                    sm.swap_in(rec, tgt, n_resident=n_pin)
+                    for p in rec.pin_pages:
+                        pins[p] -= 1
+        elif op == "discard":
+            if records:
+                rec = records.pop(arg % len(records))
+                for p in rec.pin_pages:
+                    pins[p] = pins.get(p, 0) - 1
+                sm.discard(rec)
+        _check_invariants(kv, pins)
+    for rec in records:  # abandon outstanding swaps
+        for p in rec.pin_pages:
+            pins[p] = pins.get(p, 0) - 1
+        sm.discard(rec)
     for slot in range(SLOTS):
         kv.free_slot(slot)  # no keep hook: nothing new parks
-        _check_invariants(kv)
+        _check_invariants(kv, pins)
     for p in sorted(kv._cached):
         kv.release_cached(p)
     assert kv.free_pages == kv.n_pages - 1
     assert (kv._ref == 0).all()
 
 
-_SHARE_OPS = ["alloc", "free", "share", "adopt_cached", "cow", "evict"]
+_SHARE_OPS = [
+    "alloc", "free", "share", "adopt_cached", "cow", "evict",
+    "swap_out", "swap_in", "discard",
+]
 
 
 @pytest.mark.parametrize("seed", range(8))

@@ -1,0 +1,432 @@
+"""SLO-aware scheduling: priority queue, host-memory swap, preemption.
+
+The load-bearing guarantee: preemption is a *pure scheduling change* —
+a preempted-and-resumed sequence emits bit-identical tokens to an
+unpreempted run (KV pages round-trip through host memory unchanged, and
+the sampler's noise depends only on (seed, sample index), never on the
+slot, step, or co-batch). Everything else — priority order, hysteresis,
+shared-page pinning, structured rejections — is checked against the
+engine's observable records.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.serving import (
+    REJECT_TIMEOUT,
+    REJECT_TOO_LARGE,
+    Engine,
+    EngineConfig,
+    PagedKVCache,
+    Request,
+    SamplingParams,
+    ScheduleParams,
+    Scheduler,
+    SwapManager,
+)
+
+
+def _smoke_cfg(**kw):
+    return registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=2, vocab_size=128, **kw
+    )
+
+
+def _mesh():
+    return make_local_mesh()
+
+
+# ----------------------------------------------------------------------
+# ScheduleParams / priority queue (no model)
+# ----------------------------------------------------------------------
+
+
+def test_schedule_params_validation():
+    with pytest.raises(ValueError):
+        ScheduleParams(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        ScheduleParams(deadline_s=-1.0)
+    with pytest.raises(ValueError):
+        ScheduleParams(max_queue_wait_s=-0.1)
+    with pytest.raises(TypeError):
+        Request(1, np.array([1]), 1, schedule="high")  # type: ignore
+
+
+def test_scheduler_orders_by_priority_then_deadline_then_fcfs():
+    sch = Scheduler(1)
+    prompt = np.array([1, 2, 3])
+    lo_late = Request(1, prompt, 1)  # priority 0, no deadline
+    lo_soon = Request(
+        2, prompt, 1,
+        schedule=ScheduleParams(deadline_s=1.0), submit_s=0.0,
+    )
+    hi = Request(3, prompt, 1, schedule=ScheduleParams(priority=2))
+    lo_later = Request(
+        4, prompt, 1,
+        schedule=ScheduleParams(deadline_s=9.0), submit_s=0.0,
+    )
+    for r in (lo_late, lo_soon, hi, lo_later):
+        sch.submit(r)
+    # priority first; EDF within the class; deadline-less FCFS last
+    assert [r.uid for r in sch.peek_admissible(4)] == [3, 2, 4, 1]
+    # admit() pops the head; admit(request=) pops mid-queue
+    assert sch.admit(0).request.uid == 3
+    sch.evict(0)
+    assert sch.admit(1, request=lo_later).request.uid == 4
+    assert [r.uid for r in sch.waiting] == [2, 1]
+
+
+def test_scheduler_resume_rebinds_preserved_state():
+    sch = Scheduler(2)
+    req = Request(1, np.array([1, 2, 3]), 4)
+    sch.submit(req)
+    st = sch.admit(0)
+    st.generated.extend([5, 6])
+    st.pos = 5
+    # preempt: slot freed, request re-queued (front of its class)
+    sch.evict(st.slot)
+    sch.submit(req)
+    other = Request(2, np.array([7]), 1)
+    sch.submit(other)
+    assert sch.peek_admissible(2)[0] is req  # older uid leads the class
+    back = sch.resume(st, request=req)
+    assert back is st and sch.slots[back.slot] is st
+    assert back.generated == [5, 6] and back.pos == 5
+    assert req not in sch.waiting
+    # no free slot -> resume refuses (and leaves the queue untouched)
+    sch.admit(1)
+    sch.evict(back.slot)
+    sch.submit(req)
+    third = Request(3, np.array([8]), 1)
+    sch.submit(third)
+    sch.admit(2, request=third)
+    assert sch.resume(st, request=req) is None
+    assert req in sch.waiting
+
+
+# ----------------------------------------------------------------------
+# SwapManager (real device buffers, no model forward)
+# ----------------------------------------------------------------------
+
+
+def test_swap_manager_roundtrip_restores_page_bytes():
+    cfg = _smoke_cfg().replace(
+        num_layers=1, num_heads=2, num_kv_heads=1, head_dim=8,
+        attn_block=4,
+    )
+    kv = PagedKVCache(cfg, max_slots=2, max_len=16)
+    sm = SwapManager(kv)
+    kv.alloc_upto(0, 11)  # 3 pages
+    pages = kv.owned_pages(0)
+    # stamp each page with a distinct constant so restores are provable
+    for p in pages:
+        kv.buffers = jax.tree.map(
+            lambda b, p=p: b.at[:, p].set(float(p)), kv.buffers
+        )
+    rec = sm.swap_out(0)  # nothing shared: everything goes to host
+    assert rec.pin_pages == [] and rec.n_host == 3
+    assert kv.pages_owned(0) == 0 and kv.free_pages == kv.n_pages - 1
+    sm.finalize(rec)
+    assert not rec.pending
+    # churn the freed pages so a stale-device-alias bug would show
+    kv.alloc_upto(1, 15)
+    kv.buffers = jax.tree.map(lambda b: b.at[:, 1:].set(-1.0), kv.buffers)
+    kv.free_slot(1)
+    # resume into the other slot: all pages come from the host copy
+    kv.alloc_upto(1, 11)
+    sm.swap_in(rec, 1, n_resident=0)
+    new_pages = kv.owned_pages(1)
+    for old, new in zip(pages, new_pages):
+        for leaf in jax.tree.leaves(kv.buffers):
+            np.testing.assert_array_equal(
+                np.asarray(leaf[:, new]), float(old)
+            )
+    assert sm.stats.out_pages == 3 and sm.stats.in_pages == 3
+
+
+def test_swap_manager_pins_shared_prefix_instead_of_copying():
+    cfg = _smoke_cfg().replace(
+        num_layers=1, num_heads=2, num_kv_heads=1, head_dim=8,
+        attn_block=4,
+    )
+    kv = PagedKVCache(cfg, max_slots=2, max_len=16)
+    sm = SwapManager(kv)
+    kv.alloc_upto(0, 11)  # 3 pages
+    shared = kv.owned_pages(0)[:2]
+    for p in shared:
+        kv.incref(p)
+    kv.adopt(1, shared)  # slot 1 shares the 2-page prefix
+    rec = sm.swap_out(0, max_pin=2)
+    # shared pages pinned in place (never copied), private page to host
+    assert rec.pin_pages == shared and rec.n_host == 1
+    for p in shared:  # slot 1's ref + the record's pin
+        assert kv.refcount(p) == 2
+    # resume: the re-match recovers the pinned prefix, host covers the rest
+    for p in shared:
+        kv.incref(p)
+    kv.adopt(0, list(shared))
+    kv.alloc_upto(0, 11)
+    sm.swap_in(rec, 0, n_resident=2)
+    for p in shared:  # record pin released; two slots own it
+        assert kv.refcount(p) == 2
+    assert sm.stats.pinned_pages == 2 and sm.stats.out_pages == 1
+    # a re-match that cannot cover the pinned prefix is a hard error
+    # (slot 0 still holds the shared pages, so both get pinned again)
+    rec2 = sm.swap_out(1, max_pin=2)
+    assert rec2.pin_pages == shared and rec2.n_host == 0
+    with pytest.raises(ValueError):
+        sm.swap_in(rec2, 1, n_resident=0)
+    sm.discard(rec2)
+    for p in shared:  # only slot 0's reference survives the discard
+        assert kv.refcount(p) == 1
+
+
+# ----------------------------------------------------------------------
+# Engine-level preemption
+# ----------------------------------------------------------------------
+
+
+def test_preempted_streams_bit_exact_greedy_and_sampled():
+    """The ISSUE's core contract: a preempted+resumed request's tokens
+    are bit-identical to an unpreempted run — greedy AND seeded
+    sampling (the noise stream is indexed by (seed, sample index), so a
+    swap round trip cannot shift it)."""
+    cfg = _smoke_cfg()
+    mesh = _mesh()
+    page = cfg.attn_block
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, 127, size=n).astype(np.int32)
+        for n in (page + 3, page + 5, 7)
+    ]
+    sampled = SamplingParams(temperature=0.8, top_k=20, seed=7)
+
+    def serve(preemption: bool, n_pages: int):
+        eng = Engine(
+            cfg,
+            mesh,
+            engine_cfg=EngineConfig(
+                max_slots=2,
+                max_len=4 * page,
+                n_pages=n_pages,
+                prefix_cache=True,
+                preemption=preemption,
+                preempt_min_steps=2,
+            ),
+        )
+        uids = [
+            eng.submit(prompts[0], 2 * page, sampling=sampled),
+            eng.submit(prompts[1], 2 * page),
+        ]
+        fins = []
+        if preemption:
+            for _ in range(4):  # let the pool fill before the VIP lands
+                fins += eng.step()
+        uids.append(
+            eng.submit(
+                prompts[2], page,
+                schedule=ScheduleParams(priority=5, deadline_s=60.0),
+            )
+        )
+        fins += eng.drain(max_steps=800)
+        return uids, {f.uid: f for f in fins}, eng
+
+    base_uids, base, _ = serve(False, 0)
+    # a 5-page pool around 2 slots x (2..4)-page lifetimes forces the
+    # high-priority submit to preempt instead of waiting
+    got_uids, got, eng = serve(True, 5)
+    assert sum(f.preemptions for f in got.values()) >= 1
+    s = eng.stats_summary()
+    assert s["preemption"]["swap_outs"] >= 1
+    assert s["preemption"]["out_bytes"] > 0
+    assert s["preemption"]["swap_ins"] == s["preemption"]["swap_outs"]
+    for ub, ug in zip(base_uids, got_uids):
+        np.testing.assert_array_equal(base[ub].tokens, got[ug].tokens)
+    # the preempted request's record carries its preemption count + SLO
+    vip = got[got_uids[2]]
+    assert vip.schedule.priority == 5 and vip.slo_met is True
+    assert vip.ttft_s is not None and vip.e2e_s >= vip.ttft_s
+
+
+def test_priority_request_preempts_full_pool():
+    """Starvation check: a deadline'd high-priority request submitted
+    against a full pool of long-running decodes swaps its way in and
+    finishes long before the background does."""
+    cfg = _smoke_cfg()
+    mesh = _mesh()
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=128),
+    )
+    rng = np.random.default_rng(1)
+    bg = [
+        eng.submit(rng.integers(1, 127, 8).astype(np.int32), 60)
+        for _ in range(2)
+    ]
+    fins = []
+    for _ in range(6):
+        fins += eng.step()
+    hi = eng.submit(
+        rng.integers(1, 127, 8).astype(np.int32),
+        4,
+        schedule=ScheduleParams(priority=3, deadline_s=120.0),
+    )
+    fins += eng.drain(max_steps=500)
+    by_uid = {f.uid: f for f in fins}
+    assert eng.stats.preemptions >= 1
+    assert all(
+        by_uid[hi].finish_step < by_uid[b].finish_step for b in bg
+    )
+    # the victim resumed and still emitted its full 60 tokens
+    assert all(len(by_uid[b].tokens) == 60 for b in bg)
+    # equal priority never preempts: refill the pool, submit a peer
+    pre = eng.stats.preemptions
+    for _ in range(2):
+        eng.submit(rng.integers(1, 127, 8).astype(np.int32), 30)
+    for _ in range(6):
+        eng.step()
+    eng.submit(rng.integers(1, 127, 8).astype(np.int32), 4)
+    eng.drain(max_steps=500)
+    assert eng.stats.preemptions == pre
+    # page conservation after all the swap traffic
+    kv = eng.kv
+    assert kv.free_pages + kv.cached_pages == kv.n_pages - 1
+    assert (kv._ref[1:] == 0).sum() == kv.n_pages - 1
+
+
+def test_hysteresis_blocks_preemption_of_fresh_sequences():
+    cfg = _smoke_cfg()
+    mesh = _mesh()
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(
+            max_slots=2, max_len=128, preempt_min_steps=10_000
+        ),
+    )
+    rng = np.random.default_rng(2)
+    for _ in range(2):
+        eng.submit(rng.integers(1, 127, 8).astype(np.int32), 20)
+    for _ in range(6):
+        eng.step()
+    eng.submit(
+        rng.integers(1, 127, 8).astype(np.int32),
+        4,
+        schedule=ScheduleParams(priority=9),
+    )
+    fins = eng.drain(max_steps=300)
+    # nothing ran long enough to be victimized: the VIP waited instead
+    assert eng.stats.preemptions == 0
+    assert all(f.preemptions == 0 for f in fins)
+
+
+def test_preemption_pins_shared_prefix_pages():
+    """A victim sharing its prompt prefix with a running peer must not
+    copy those pages to host — they stay pinned in place."""
+    cfg = _smoke_cfg()
+    mesh = _mesh()
+    page = cfg.attn_block
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(
+            max_slots=2, max_len=4 * page, prefix_cache=True,
+            preempt_min_steps=2,
+        ),
+    )
+    rng = np.random.default_rng(3)
+    shared = rng.integers(1, 127, 2 * page + 5).astype(np.int32)
+    a = eng.submit(shared, page)
+    eng.step()  # admit + index A's prompt pages
+    b = eng.submit(shared, 2 * page)  # same prompt: shares 2 pages
+    for _ in range(4):
+        eng.step()
+    hi = eng.submit(
+        rng.integers(1, 127, 7).astype(np.int32),
+        4,
+        schedule=ScheduleParams(priority=7),
+    )
+    fins = eng.drain(max_steps=800)
+    by_uid = {f.uid: f for f in fins}
+    s = eng.stats_summary()["preemption"]
+    assert s["swap_outs"] >= 1
+    # the victim's 2-page shared prefix was pinned, never copied
+    assert s["pinned_pages"] >= 2
+    # identical prompts + greedy: identical streams regardless of which
+    # one was preempted
+    n = min(len(by_uid[a].tokens), len(by_uid[b].tokens))
+    np.testing.assert_array_equal(
+        by_uid[a].tokens[:n], by_uid[b].tokens[:n]
+    )
+
+
+# ----------------------------------------------------------------------
+# Structured rejections
+# ----------------------------------------------------------------------
+
+
+def test_structured_rejections_and_drain_delivery():
+    cfg = _smoke_cfg()
+    mesh = _mesh()
+    page = cfg.attn_block
+    eng = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=2 * page),
+    )
+    rng = np.random.default_rng(4)
+
+    # too-large prompt: rejected, not raised — even with an idle queue,
+    # drain() must deliver it
+    big = rng.integers(1, 127, 5 * page).astype(np.int32)
+    uid = eng.submit(big, 2)
+    out = eng.drain(max_steps=5)
+    assert [f.uid for f in out] == [uid]
+    assert out[0].rejected and out[0].reject_reason == REJECT_TOO_LARGE
+    assert out[0].finish_reason == "rejected"
+    assert out[0].slo_met is None  # no deadline attached
+    assert len(out[0].tokens) == 0
+
+    # an oversized *generation* budget is NOT a rejection: the engine
+    # caps the lifetime at slot capacity and finishes on "capacity"
+    uid2 = eng.submit(rng.integers(1, 127, 4).astype(np.int32), 10**6)
+    out2 = eng.drain(max_steps=300)
+    assert out2[0].uid == uid2
+    assert out2[0].finish_reason == "capacity"
+    # prefill emits token 0, then one decode per write position
+    # plen..max_len-1: 1 + (max_len - plen) tokens total
+    assert len(out2[0].tokens) == 2 * page - 4 + 1
+
+    # queue-wait timeout: a full pool + an impatient request
+    bg = [
+        eng.submit(rng.integers(1, 127, 8).astype(np.int32), 40)
+        for _ in range(2)
+    ]
+    eng.step()
+    impatient = eng.submit(
+        rng.integers(1, 127, 8).astype(np.int32),
+        4,
+        schedule=ScheduleParams(
+            max_queue_wait_s=0.0, deadline_s=5.0
+        ),
+    )
+    time.sleep(0.01)
+    fins = eng.drain(max_steps=300)
+    by_uid = {f.uid: f for f in fins}
+    rej = by_uid[impatient]
+    assert rej.rejected and rej.reject_reason == REJECT_TIMEOUT
+    assert rej.slo_met is False  # deadline'd + rejected = missed
+    assert all(len(by_uid[b].tokens) == 40 for b in bg)
+    s = eng.stats_summary()
+    assert s["rejected"]["total"] == 2
+    assert s["rejected"][REJECT_TOO_LARGE] == 1
+    assert s["rejected"][REJECT_TIMEOUT] == 1
+    assert s["slo"] == {
+        "with_deadline": 1, "met": 0, "attainment": 0.0
+    }

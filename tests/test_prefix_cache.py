@@ -379,6 +379,40 @@ def test_engine_prefix_hit_prefills_only_suffix():
     )
 
 
+def test_engine_decode_pages_indexed_for_multi_turn_chat():
+    """A finished sequence's decode-written pages are indexed into the
+    radix tree, so a chat turn-2 prompt (turn-1 prompt + answer + new
+    user text) hits pages that were never prefilled as prompt content."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+    eng = Engine(
+        cfg, mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=6 * page,
+                                prefix_cache=True),
+    )
+    rng = np.random.default_rng(5)
+    user1 = rng.integers(0, cfg.vocab_size, page).astype(np.int32)
+    eng.submit(user1, page + 1)
+    f1 = eng.drain(max_steps=200)[0]
+    assert len(f1.tokens) == page + 1
+    # written history = prompt + generated[:-1] (the last token was
+    # never written back) spans 2 full pages; the prompt page was
+    # already indexed at admission, so finish indexes 1 *new* decode page
+    assert eng.stats_summary()["prefix_cache"]["decode_indexed_pages"] == 1
+
+    prompt2 = np.concatenate(
+        [user1, f1.tokens, rng.integers(0, cfg.vocab_size, page
+                                        ).astype(np.int32)]
+    )
+    eng.submit(prompt2, 4)
+    f2 = eng.drain(max_steps=40)[0]
+    # both indexed pages hit even though one was decode-written
+    assert f2.prefix_hit_tokens == 2 * page
+    s = eng.stats_summary()
+    assert s["prefix_cache"]["hit_pages"] == 2
+
+
 def test_engine_prefix_eviction_never_blocks_admission():
     """With a pool sized so parked pages must be reclaimed, admission
     evicts LRU cached pages instead of failing — the cache is strictly
