@@ -69,6 +69,10 @@ METRICS = [
         ("goodput", "chat", "turn2plus_hit_rate"),
         True,
     ),
+    ("mesh tp=1 decode tok/s", ("mesh", "by_tp", "1", "decode_tok_s"), True),
+    ("mesh tp=8 decode tok/s", ("mesh", "by_tp", "8", "decode_tok_s"), True),
+    ("mesh streams equal", ("mesh", "streams_equal"), True),
+    ("mesh router wall tok/s", ("mesh", "router", "wall_tok_s"), True),
 ]
 
 
@@ -148,6 +152,20 @@ def main() -> int:
         flag = "REGRESSION" if worse > args.threshold else ""
         flagged += bool(flag)
         rows.append((label, b, c, f"{rel:+.1%}", flag))
+
+    # Top-level trajectory scan: a scenario block added by the current
+    # PR is reported as "new" and never flagged (growing the benchmark
+    # must not strict-fail the very run that grows it); a block that
+    # *vanished* is a regression — some scenario stopped being measured
+    # — and gates under --strict like any other flagged row.
+    for key in sorted(set(base) | set(cur)):
+        if key == "config" or (key in base) == (key in cur):
+            continue
+        gone = key not in cur
+        flagged += gone
+        rows.append(
+            (f"trajectory[{key}]", None, None, "", "GONE" if gone else "new")
+        )
 
     w = max(len(r[0]) for r in rows) if rows else 0
     fmt = "%s%-*s  %10s  %10s  %8s  %s"

@@ -32,4 +32,14 @@ python -m benchmarks.serve_engine --smoke > /dev/null
 # noise must not gate tier 1; scripts/bench_diff.py --strict exists for
 # CI jobs that do want a hard gate.
 python scripts/bench_diff.py || true
+# Simulated-mesh leg: sharded-engine stream parity and the sharded-pool
+# fuzz trace need >1 device, and device count is fixed at the first
+# backend init — so they run in their own process on 8 forced host CPU
+# devices. (The main pytest pass below collects the same files but
+# skips the mesh-gated tests on its single default device.)
+echo "tier1: simulated 8-device mesh leg"
+JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -q -m "not slow" \
+    tests/test_mesh_serving.py tests/test_paged_cache_props.py
 exec python -m pytest -q -m "not slow" --durations=10 "$@"

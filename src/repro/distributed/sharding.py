@@ -222,12 +222,46 @@ def batch_specs(st: Strategy, batch) -> Any:
     return jax.tree.map(spec, batch)
 
 
-def cache_specs(st: Strategy, caches) -> Any:
+def _paged_pool_spec(st: Strategy, shape: tuple[int, ...]) -> P:
+    """Slot-shared page pools: ``(count, n_pages, page, kv_heads,
+    head_dim)`` leaves (or the per-layer 4-dim view inside a group scan).
+    The page axes are allocator-owned — any physical page may map into
+    any slot's table, and the host rewrites the page table every step —
+    so they must stay replicated; only the trailing *head* axes shard.
+    kv_heads on the model axis is classic head-parallel attention;
+    head_dim is the fallback for GQA head counts the mesh doesn't
+    divide. Data axes replicate: data parallelism over serving traffic
+    is replica routing at the engine layer (``serving.router``), not a
+    sharded pool. Must agree with ``layers.paged_pool_entry`` — the
+    in-jit constraint and the buffer sharding pin the same layout."""
+    ent: list[Any] = [None] * len(shape)
+    ma = st.model_axis
+    if ma and len(shape) >= 2:
+        for d in (len(shape) - 2, len(shape) - 1):
+            if _fits(st.mesh, shape[d], ma) and shape[d] >= _axsize(
+                st.mesh, ma
+            ):
+                ent[d] = ma
+                break
+    return P(*ent)
+
+
+def cache_specs(st: Strategy, caches, *, layout: str = "decode") -> Any:
     """Decode caches: (count, B, ...) leaves. Batch over the data axes when
     divisible, model on the LAST divisible trailing dim (head_dim/state) —
     not the sequence dim, where a seq-sharded KV cache forces GSPMD to
-    reshard around every dynamic_update_slice."""
+    reshard around every dynamic_update_slice.
+
+    ``layout="paged"`` switches to the serving engine's slot-shared page
+    pools, whose leaves are (count, n_pages, page, kv_heads, head_dim)
+    with no batch dim at all — see ``_paged_pool_spec``."""
     mesh = st.mesh
+    if layout == "paged":
+        return jax.tree.map(
+            lambda a: _paged_pool_spec(st, tuple(a.shape)), caches
+        )
+    if layout != "decode":
+        raise ValueError(f"unknown cache layout {layout!r}")
 
     def spec(a):
         if a.ndim <= 1:

@@ -22,7 +22,12 @@ from repro.kernels import ref
 from repro.kernels.bsr_attention import block_sparse_attention_pallas
 from repro.kernels.bsr_matmul import bsr_matmul_pallas
 
-__all__ = ["default_impl", "bsr_matmul", "block_sparse_attention"]
+__all__ = [
+    "default_impl",
+    "paged_impl_for_mesh",
+    "bsr_matmul",
+    "block_sparse_attention",
+]
 
 
 def default_impl() -> str:
@@ -31,6 +36,21 @@ def default_impl() -> str:
     except RuntimeError:  # pragma: no cover - no backend at all
         platform = "cpu"
     return "pallas" if platform == "tpu" else "gather"
+
+
+def paged_impl_for_mesh(impl: str, tp_size: int) -> str:
+    """Clamp the paged-attention impl for a tensor-parallel mesh.
+
+    The Pallas page-pool kernel has no SPMD partitioning rule — under
+    GSPMD a pallas_call on sharded operands would force a full
+    all-gather of the KV pools onto every device (or need a shard_map
+    port, a follow-up once real multi-chip TPU is available). The jnp
+    gather path is built from ops GSPMD partitions natively, so sharded
+    pools always take it; single-device meshes keep the requested impl.
+    """
+    if tp_size > 1 and impl in ("pallas", "interpret"):
+        return "gather"
+    return impl
 
 
 def bsr_matmul(

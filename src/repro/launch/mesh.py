@@ -7,8 +7,15 @@ state (device count is locked on first backend init).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh", "fsdp_axes", "MODEL_AXIS"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_tp_mesh",
+    "fsdp_axes",
+    "MODEL_AXIS",
+]
 
 MODEL_AXIS = "model"
 
@@ -26,6 +33,20 @@ def make_local_mesh(data: int | None = None, model: int = 1):
     if data is None:
         data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """A ``(1, tp)`` slice over the first ``tp`` devices: the serving
+    engine's tensor-parallel mesh. Unlike ``make_local_mesh`` it does
+    not claim every device — data parallelism for serving is replica
+    routing over disjoint slices (``repro.serving.router``), never a
+    batch-sharded step, so one engine takes exactly ``tp`` devices."""
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise ValueError(f"tp={tp} needs {tp} devices, have {len(devs)}")
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devs[:tp]).reshape(1, tp), ("data", "model"))
 
 
 def fsdp_axes(mesh) -> tuple[str, ...]:

@@ -27,7 +27,11 @@ import numpy as np
 
 from repro.configs import registry
 from repro.distributed import sharding
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (
+    make_local_mesh,
+    make_production_mesh,
+    make_tp_mesh,
+)
 from repro.models import transformer as T
 from repro.serving import (
     Engine,
@@ -35,6 +39,7 @@ from repro.serving import (
     SamplingParams,
     ScheduleParams,
 )
+from repro.serving.router import ReplicaRouter
 
 
 class Server:
@@ -147,6 +152,14 @@ def main():
                          "blocks later admissions until it fits "
                          "(0 disables aging)")
     ap.add_argument("--strategy", choices=["tp", "fsdp"], default="fsdp")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard weights AND the "
+                         "paged KV pools over the model axis of a "
+                         "(1, tp) device slice (implies --strategy tp)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel replicas: N complete engines on "
+                         "disjoint (1, tp) slices behind a least-loaded "
+                         "router (repro.serving.router)")
     ap.add_argument("--paged-impl", default=None,
                     choices=["gather", "pallas", "interpret"],
                     help="paged decode-attention read (default: pallas on "
@@ -166,9 +179,16 @@ def main():
             f"{args.arch} has a stub modality frontend; serve the backbone "
             "via the dry-run (decode_32k) instead"
         )
-    mesh = (
-        make_production_mesh() if args.production_mesh else make_local_mesh()
-    )
+    if args.tp > 1 and args.strategy != "tp":
+        raise SystemExit(
+            "--tp > 1 shards over the model axis: pass --strategy tp"
+        )
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    elif args.tp > 1:
+        mesh = make_tp_mesh(args.tp)
+    else:
+        mesh = make_local_mesh()
     rng = np.random.default_rng(0)
     prompts = rng.integers(
         0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32
@@ -207,29 +227,67 @@ def main():
         return
 
     max_len = args.max_len or (args.prompt_len + args.gen + 1)
-    engine = Engine(
-        cfg,
-        mesh,
-        strategy=args.strategy,
-        engine_cfg=EngineConfig(
-            max_slots=args.slots or args.batch,
-            max_len=max_len,
-            lookahead=args.lookahead or None,
-            max_prefill_batch=args.max_prefill_batch,
-            sampler_candidates=args.sampler_candidates,
-            max_skips=args.max_skips,
-            prefix_cache=args.prefix_cache,
-            preemption=not args.no_preemption,
-            preempt_min_steps=args.preempt_min_steps,
-        ),
-        paged_impl=args.paged_impl,
+    ecfg = EngineConfig(
+        max_slots=args.slots or args.batch,
+        max_len=max_len,
+        lookahead=args.lookahead or None,
+        max_prefill_batch=args.max_prefill_batch,
+        sampler_candidates=args.sampler_candidates,
+        max_skips=args.max_skips,
+        prefix_cache=args.prefix_cache,
+        preemption=not args.no_preemption,
+        preempt_min_steps=args.preempt_min_steps,
     )
-    print(f"paged decode impl: {engine.paged_impl}, sampler: {sp0.kind}")
     schedule = ScheduleParams(
         priority=args.priority,
         deadline_s=args.deadline or None,
         max_queue_wait_s=args.max_queue_wait or None,
     )
+    if args.replicas > 1:
+        router = ReplicaRouter(
+            cfg,
+            replicas=args.replicas,
+            tp=args.tp,
+            engine_cfg=ecfg,
+            strategy=args.strategy,
+            paged_impl=args.paged_impl,
+        )
+        print(
+            f"paged decode impl: {router.engines[0].paged_impl}, "
+            f"sampler: {sp0.kind}, "
+            f"{args.replicas} replicas x tp={args.tp}"
+        )
+        for b in range(args.batch):
+            router.submit(
+                prompts[b],
+                args.gen,
+                sampling=dataclasses.replace(sp0, seed=args.seed + b),
+                schedule=schedule,
+            )
+        t0 = time.perf_counter()
+        finished = router.drain()
+        dt = time.perf_counter() - t0
+        total = sum(len(f.tokens) for f in finished)
+        per = [int(e.stats.finished) for e in router.engines]
+        print(
+            f"served {len(finished)} requests / {total} tokens in "
+            f"{dt:.2f}s ({total / dt:.1f} tok/s end-to-end; "
+            f"per-replica finished: {per})"
+        )
+        grid = np.stack(
+            [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
+        )
+        print(grid)
+        return
+
+    engine = Engine(
+        cfg,
+        mesh,
+        strategy=args.strategy,
+        engine_cfg=ecfg,
+        paged_impl=args.paged_impl,
+    )
+    print(f"paged decode impl: {engine.paged_impl}, sampler: {sp0.kind}")
     for b in range(args.batch):
         # each request gets its own noise stream via a distinct seed
         engine.submit(

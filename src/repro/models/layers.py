@@ -35,6 +35,36 @@ def constrain(cfg: ModelConfig, x: jax.Array, *spec) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
+def paged_pool_entry(cfg: ModelConfig, hk: int, d: int) -> int | None:
+    """Which of a paged KV pool leaf's two trailing head axes the model
+    axis shards: -2 (kv_heads) preferred, -1 (head_dim) fallback, None
+    when neither divides (or no TP). The page axes always replicate —
+    the host rewrites the page table every step, so any page must be
+    addressable from any slot. Must agree with
+    ``distributed.sharding._paged_pool_spec`` (the buffer's resting
+    NamedSharding) so the in-jit constraints never force a reshard."""
+    tp = cfg.tp_size or 1
+    if tp <= 1:
+        return None
+    if hk % tp == 0 and hk >= tp:
+        return -2
+    if d % tp == 0 and d >= tp:
+        return -1
+    return None
+
+
+def constrain_paged_pool(cfg: ModelConfig, buf: jax.Array) -> jax.Array:
+    """Pin a slot-shared page pool's sharding inside a jit'd step: leaves
+    are (..., page, kv_heads, head_dim); one head axis shards on the
+    model axis per ``paged_pool_entry``, everything else replicates."""
+    ax = paged_pool_entry(cfg, buf.shape[-2], buf.shape[-1])
+    if ax is None:
+        return buf
+    spec: list = [None] * buf.ndim
+    spec[buf.ndim + ax] = "model"
+    return constrain(cfg, buf, *spec)
+
+
 def _attn_activation_specs(cfg: ModelConfig, seq: int):
     """How to shard (b, s, hk, g, d) attention activations over the model
     axis, in preference order:
@@ -814,6 +844,20 @@ def apply_attention(
     elif mode in ("decode_paged", "decode_paged_sparse"):
         assert cache is not None and pos is not None and page_table is not None
         page = cache["k"].shape[1]
+        # tensor-parallel decode: head-partition the fresh K/V and the
+        # grouped queries on the same axis the pool shards, so the write
+        # scatter and the attention read stay shard-local (the only
+        # collective left is wo's psum).
+        pool_ax = paged_pool_entry(c, hk, d)
+        ba = c.batch_axes or None
+        if pool_ax == -2:
+            qg = constrain(c, qg, ba, None, "model", None, None)
+            k = constrain(c, k, ba, None, "model", None)
+            v = constrain(c, v, ba, None, "model", None)
+        elif pool_ax == -1:
+            qg = constrain(c, qg, ba, None, None, None, "model")
+            k = constrain(c, k, ba, None, None, "model")
+            v = constrain(c, v, ba, None, None, "model")
         # write-at-position: each slot's token lands in its own page; idle
         # slots all route to the shared trash page 0 (never read back).
         phys = jnp.take_along_axis(page_table, (pos // page)[:, None], axis=1)
@@ -821,6 +865,8 @@ def apply_attention(
         off = pos % page
         kc = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
         vc = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        kc = constrain_paged_pool(c, kc)
+        vc = constrain_paged_pool(c, vc)
         new_cache = {"k": kc, "v": vc}
         if mode == "decode_paged_sparse" and page == c.attn_block:
             o = paged_sparse_decode_attention_jnp(

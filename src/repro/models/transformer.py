@@ -233,12 +233,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
     return caches
 
 
-def init_paged_cache(cfg: ModelConfig, n_pages: int, page: int) -> list:
+def init_paged_cache(
+    cfg: ModelConfig, n_pages: int, page: int, *, shardings: list | None = None
+) -> list:
     """Slot-shared page pools, one per layer group (stacked over layers).
 
     Physical page 0 is reserved as the trash page (idle slots and
-    unallocated page-table entries point at it); the serving allocator
-    hands out pages 1..n_pages-1.
+    unallocated table entries point at it); the serving allocator hands
+    out pages 1..n_pages-1. ``shardings`` (a matching tree of
+    ``NamedSharding``, built from ``sharding.cache_specs(layout="paged")``)
+    places each pool across the mesh at creation — head axes sharded on
+    the model axis, page axes replicated — so tensor-parallel decode
+    never starts from a single-device pool.
     """
     caches = []
     for g in cfg.layer_groups():
@@ -259,6 +265,8 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page: int) -> list:
                 ),
             }
         )
+    if shardings is not None:
+        caches = jax.tree.map(jax.device_put, caches, shardings)
     return caches
 
 
@@ -510,7 +518,11 @@ def prefill_paged(
             # Rows collide only on the shared trash page 0 (padding), where
             # last-write-wins is fine — trash is masked by logical position
             # on every read.
-            return buf.at[:, page_rows].set(fb.astype(buf.dtype))
+            # pin the pool layout through the scatter: the page axes stay
+            # replicated, the head axis keeps its model-axis shard
+            return L.constrain_paged_pool(
+                cfg, buf.at[:, page_rows].set(fb.astype(buf.dtype))
+            )
 
         new_caches.append(jax.tree.map(scat, pool, fresh))
     if sampler is None:

@@ -204,7 +204,11 @@ class Engine:
                 )(key)
             self.params = params
             self.kv = PagedKVCache(
-                cfg, ecfg.max_slots, ecfg.max_len, n_pages=ecfg.n_pages
+                cfg,
+                ecfg.max_slots,
+                ecfg.max_len,
+                n_pages=ecfg.n_pages,
+                strategy=st,
             )
             if paged_impl is None:
                 from repro.kernels.ops import default_impl
@@ -217,6 +221,11 @@ class Engine:
                     f"unknown paged_impl {paged_impl!r}; expected "
                     "'gather', 'pallas' or 'interpret'"
                 )
+            from repro.kernels.ops import paged_impl_for_mesh
+
+            # sharded pools force the gather path: the Pallas kernel has
+            # no SPMD partitioning rule (see kernels.ops)
+            paged_impl = paged_impl_for_mesh(paged_impl, st.tp_size)
             self.paged_impl = paged_impl
             # Slot-indexed sampling state. The host-side (slots,) param
             # rows are written at admission; each step packs them into
@@ -380,6 +389,15 @@ class Engine:
         # hand out twice, or an oversubscribed pool would exhaust
         # mid-decode (alloc_upto raises, losing every in-flight request).
         self._page_need: dict[int, int] = {}
+        # slot -> unconsumed COW-page reservations. A prefix-hit slot
+        # maps shared/radix-indexed pages it must not write into; if a
+        # write ever lands there (sub-page matching, forking),
+        # _ensure_writable needs ONE fresh page for the split. That page
+        # is budgeted at admission (folded into _page_need) — without
+        # it, an oversubscribed pool can be legitimately dry when the
+        # split fires and cow_page raises mid-decode, killing every
+        # in-flight request.
+        self._cow_reserve: dict[int, int] = {}
         # slots whose active request needs the sampled step variant
         # (noise or presence state); empty set -> plain fast path
         self._fancy_slots: set[int] = set()
@@ -568,8 +586,15 @@ class Engine:
         writing would corrupt future hits) is first replaced by a fresh
         page with a jit'd device-side copy. Page-granular prefix hits
         only ever share *full* pages behind the write position, so this
-        fires on future sub-page matching or sequence forking — it is
-        the invariant, not a hot path."""
+        fires on sub-page matching or sequence forking — it is the
+        invariant, not a hot path.
+
+        The fresh page comes out of the slot's COW reservation
+        (``_cow_reserve``, budgeted at prefix-hit admission): the split
+        replaces a mapping rather than growing the sequence, so the
+        slot's remaining lifetime draw shrinks by one — consuming the
+        reservation keeps ``_reserved_pages`` exact and guarantees the
+        pool is never dry here even when fully oversubscribed."""
         if self._prefix is None:
             return
         li = pos // self.kv.page
@@ -579,6 +604,9 @@ class Engine:
         if self.kv.refcount(p) > 1 or self._prefix.page_in_tree(p):
             self._prefix.ensure_free(1)
             self.kv.cow_page(slot, li, keep=self._prefix.page_in_tree)
+            if self._cow_reserve.get(slot, 0) > 0:
+                self._cow_reserve[slot] -= 1
+                self._page_need[slot] -= 1
             self.stats.record_cow()
 
     def _reserved_pages(self) -> int:
@@ -601,10 +629,26 @@ class Engine:
         prefix (its swap pins keep the shared pages live, so the tree
         still maps them) comes back through the same walk, and the cost
         formula — lifetime minus resident — prices exactly the fresh
-        pages the restore plus future decode growth still need."""
+        pages the restore plus future decode growth still need.
+
+        A hit also costs one *COW reserve* page (see ``_cow_reserve``):
+        the shared pages the slot adopts are write-protected, and a
+        future split must never find the pool dry. A pool-filling
+        request (lifetime == every allocatable page) physically cannot
+        carry the extra page, so it declines the hit and prefills fresh
+        — a miss shares nothing, so it needs no reserve. Resumes are
+        exempt from declining: their pinned shared pages were never
+        copied to host, so the re-match MUST adopt them."""
         if self._prefix is None:
             return [], self._lifetime_pages(req)
         pages = self._prefix.match(req.prompt)
+        lifetime = self._lifetime_pages(req)
+        if (
+            pages
+            and req.uid not in self._swapped
+            and lifetime + 1 > self.kv.n_pages - 1
+        ):
+            return [], lifetime
         parked = 0
         for p in pages:
             if self.kv.is_cached(p):
@@ -612,7 +656,8 @@ class Engine:
                 parked += 1
             else:
                 self.kv.incref(p)
-        return pages, self._lifetime_pages(req) - len(pages) + parked
+        reserve = 1 if pages else 0
+        return pages, lifetime - len(pages) + parked + reserve
 
     def _unpin(self, pages: list[int]) -> None:
         for p in pages:
@@ -759,6 +804,7 @@ class Engine:
         )
         self.scheduler.evict(slot)
         self._page_need.pop(slot, None)
+        self._cow_reserve.pop(slot, None)
         self._fancy_slots.discard(slot)
         state.preemptions += 1
         self._swapped[state.request.uid] = (state, record)
@@ -776,7 +822,9 @@ class Engine:
         state, record = self._swapped.pop(req.uid)
         assert self.scheduler.resume(state, request=req) is not None
         slot = state.slot
-        self._page_need[slot] = self._lifetime_pages(req)
+        reserve = 1 if pages else 0
+        self._page_need[slot] = self._lifetime_pages(req) + reserve
+        self._cow_reserve[slot] = reserve
         self._bind_sampler(slot, req.sampling, state.plen)
         if pages:
             self.kv.adopt(slot, pages)
@@ -845,7 +893,13 @@ class Engine:
             state.resume_step = self._step_idx
             hit = len(pages) * self.kv.page
             state.prefix_hit_tokens = hit
-            self._page_need[state.slot] = self._lifetime_pages(req)
+            # a prefix hit carries one extra budgeted page: the COW
+            # reserve for a future split of an adopted shared page
+            reserve = 1 if pages else 0
+            self._page_need[state.slot] = (
+                self._lifetime_pages(req) + reserve
+            )
+            self._cow_reserve[state.slot] = reserve
             self._bind_sampler(state.slot, req.sampling, state.plen)
             if pages:
                 self.kv.adopt(state.slot, pages)
@@ -1043,6 +1097,7 @@ class Engine:
         # releases the reservation, freeing the slot returns the
         # allocated pages — and are counted for the stats.
         need = self._page_need.pop(state.slot, 0)
+        self._cow_reserve.pop(state.slot, None)
         reclaimed = max(0, need - self.kv.pages_owned(state.slot))
         if self._prefix is not None:
             # index the decode-written pages too (full blocks only): the

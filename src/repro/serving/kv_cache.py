@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as sharding_lib
 from repro.models import transformer as T
 
 __all__ = ["PagedKVCache"]
@@ -59,12 +60,20 @@ class PagedKVCache:
         max_len: int,
         *,
         n_pages: int = 0,
+        strategy: "sharding_lib.Strategy | None" = None,
     ):
         """``n_pages=0`` sizes the pool worst-case (every slot full).
         A smaller pool *oversubscribes* the cache — the engine budgets
         each sequence's lifetime pages (prompt + decode growth, capped at
         ``max_new_tokens``) at admission, so more sequences fit than the
-        worst case without ``alloc_upto`` ever running dry mid-decode."""
+        worst case without ``alloc_upto`` ever running dry mid-decode.
+
+        ``strategy`` shards the pools across its mesh
+        (``sharding.cache_specs(layout="paged")``: one head axis on the
+        model axis, page axes replicated) so one engine spans a
+        tensor-parallel device mesh. The host-side page table, free list
+        and refcounts are unchanged — paging is device-layout-agnostic
+        because the page axes are never sharded."""
         page = cfg.attn_block
         if max_len % page:
             raise ValueError(
@@ -85,7 +94,19 @@ class PagedKVCache:
                 f"[{self.pages_per_seq + 1}, {worst}] (one full slot + "
                 "trash .. every slot full + trash)"
             )
-        self.buffers = T.init_paged_cache(cfg, self.n_pages, page)
+        self.strategy = strategy
+        self.shardings = None
+        if strategy is not None and strategy.mesh.size > 1:
+            shapes = jax.eval_shape(
+                lambda: T.init_paged_cache(cfg, self.n_pages, page)
+            )
+            self.shardings = sharding_lib.named(
+                strategy,
+                sharding_lib.cache_specs(strategy, shapes, layout="paged"),
+            )
+        self.buffers = T.init_paged_cache(
+            cfg, self.n_pages, page, shardings=self.shardings
+        )
         self.page_table = np.zeros(
             (max_slots, self.pages_per_seq), np.int32
         )

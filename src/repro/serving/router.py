@@ -1,0 +1,140 @@
+"""Data-parallel replica routing: one logical engine over N replicas.
+
+Tensor parallelism shards a single engine's weights and KV pools over
+the ``model`` mesh axis (``PagedKVCache(strategy=)``); *data*
+parallelism for serving traffic is a different shape entirely — requests
+are independent, so the right construction is N complete engines on
+disjoint device slices with a thin router in front, not a batch-sharded
+step. A batch-sharded decode would force every replica to run in
+lockstep with the slowest admission wave; independent engines admit,
+preempt and finish on their own clocks.
+
+``ReplicaRouter`` exposes the ``Engine`` surface (``submit`` /
+``step`` / ``drain``) and routes each request to the least-loaded
+replica (outstanding-request count, ties to the lowest index, so
+single-request traffic is deterministic). Streams are bit-identical to
+any single engine's: every replica initializes the same parameters from
+the same seed, and the sampler's noise is keyed on (request seed,
+sample index) — never on the slot, batch or device that serves it.
+
+Router uids are replica-independent: ``submit`` returns a router-level
+uid and finished results are re-tagged with it, so callers never see
+replica-local ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import FinishedRequest, ScheduleParams
+from repro.serving.sampling import SamplingParams
+
+__all__ = ["ReplicaRouter"]
+
+
+class ReplicaRouter:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        replicas: int,
+        tp: int = 1,
+        engine_cfg: EngineConfig | None = None,
+        strategy: str = "tp",
+        seed: int = 0,
+        paged_impl: str | None = None,
+        devices: list | None = None,
+    ):
+        """``replicas * tp`` devices are carved into ``replicas``
+        disjoint ``(1, tp)`` meshes (axes ``("data", "model")``), one
+        full engine per slice. ``tp > 1`` composes both parallelism
+        kinds: each replica is itself tensor-parallel."""
+        if replicas < 1 or tp < 1:
+            raise ValueError("replicas and tp must be >= 1")
+        devices = list(devices if devices is not None else jax.devices())
+        need = replicas * tp
+        if len(devices) < need:
+            raise ValueError(
+                f"{replicas} replicas x tp={tp} needs {need} devices, "
+                f"have {len(devices)}"
+            )
+        self.replicas = replicas
+        self.tp = tp
+        self.engines: list[Engine] = []
+        for r in range(replicas):
+            sub = np.asarray(devices[r * tp : (r + 1) * tp]).reshape(1, tp)
+            mesh = Mesh(sub, ("data", "model"))
+            self.engines.append(
+                Engine(
+                    cfg,
+                    mesh,
+                    engine_cfg=engine_cfg,
+                    strategy=strategy,
+                    seed=seed,
+                    paged_impl=paged_impl,
+                )
+            )
+        self._outstanding = [0] * replicas
+        # router uid -> (replica, replica-local uid); local uid -> router
+        self._placed: dict[int, tuple[int, int]] = {}
+        self._router_uid: list[dict[int, int]] = [{} for _ in range(replicas)]
+        self._uid = 0
+
+    # ---- request intake ----------------------------------------------
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        *,
+        eos_id: int | None = None,
+        sampling: SamplingParams | None = None,
+        schedule: ScheduleParams | None = None,
+    ) -> int:
+        """Enqueue on the least-loaded replica; returns a router uid."""
+        r = min(range(self.replicas), key=lambda i: (self._outstanding[i], i))
+        local = self.engines[r].submit(
+            prompt,
+            max_new_tokens,
+            eos_id=eos_id,
+            sampling=sampling,
+            schedule=schedule,
+        )
+        self._uid += 1
+        self._outstanding[r] += 1
+        self._placed[self._uid] = (r, local)
+        self._router_uid[r][local] = self._uid
+        return self._uid
+
+    # ---- stepping ----------------------------------------------------
+    def step(self) -> list[FinishedRequest]:
+        """Step every replica once; finished results carry router uids."""
+        out: list[FinishedRequest] = []
+        for r, eng in enumerate(self.engines):
+            for fin in eng.step():
+                uid = self._router_uid[r].pop(fin.uid, fin.uid)
+                self._placed.pop(uid, None)
+                self._outstanding[r] -= 1
+                out.append(dataclasses.replace(fin, uid=uid))
+        return out
+
+    @property
+    def idle(self) -> bool:
+        return all(n == 0 for n in self._outstanding)
+
+    def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:
+        out: list[FinishedRequest] = []
+        steps = 0
+        while not self.idle:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps and not self.idle:
+                raise RuntimeError(
+                    f"drain did not converge in {max_steps} steps"
+                )
+        return out

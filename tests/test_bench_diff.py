@@ -1,0 +1,110 @@
+"""scripts/bench_diff.py: trajectory-diff semantics.
+
+The contract that matters for a stacked-PR repo: a scenario block that
+is *new in the current* BENCH_serve.json (this PR grew the benchmark)
+reports as "new" and never fails --strict, while a block that
+*vanished* (a scenario silently stopped being measured) is flagged and
+gates. Plain metric regressions keep flagging as before.
+"""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+_spec = importlib.util.spec_from_file_location(
+    "bench_diff", ROOT / "scripts" / "bench_diff.py"
+)
+bench_diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_diff)
+
+
+def _payload(*, mesh: bool, server_tok_s: float = 10.0) -> dict:
+    p = {
+        "config": {"arch": "smoke"},
+        "server": {"tok_s": server_tok_s},
+        "engine_uniform": {
+            "decode_tok_s": 100.0,
+            "p95_token_latency_ms": 2.0,
+        },
+    }
+    if mesh:
+        p["mesh"] = {
+            "streams_equal": True,
+            "by_tp": {
+                "1": {"decode_tok_s": 50.0},
+                "8": {"decode_tok_s": 20.0},
+            },
+            "router": {"wall_tok_s": 30.0},
+        }
+    return p
+
+
+def _run(tmp_path, monkeypatch, capsys, cur: dict, base: dict, *extra):
+    c, b = tmp_path / "cur.json", tmp_path / "base.json"
+    c.write_text(json.dumps(cur))
+    b.write_text(json.dumps(base))
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        ["bench_diff.py", "--current", str(c), "--baseline", str(b), *extra],
+    )
+    rc = bench_diff.main()
+    return rc, capsys.readouterr().out
+
+
+def test_new_trajectory_reports_new_and_passes_strict(
+    tmp_path, monkeypatch, capsys
+):
+    rc, out = _run(
+        tmp_path,
+        monkeypatch,
+        capsys,
+        _payload(mesh=True),
+        _payload(mesh=False),
+        "--strict",
+    )
+    assert rc == 0
+    assert "trajectory[mesh]" in out
+    assert "new" in out
+    assert "GONE" not in out
+    # the mesh *metrics* are new too: reported, not flagged
+    assert "mesh tp=8 decode tok/s" in out
+
+
+def test_vanished_trajectory_flags_and_gates_strict(
+    tmp_path, monkeypatch, capsys
+):
+    cur, base = _payload(mesh=False), _payload(mesh=True)
+    rc, out = _run(tmp_path, monkeypatch, capsys, cur, base)
+    assert rc == 0  # non-strict stays a report
+    assert "GONE" in out and "trajectory[mesh]" in out
+    rc, out = _run(tmp_path, monkeypatch, capsys, cur, base, "--strict")
+    assert rc == 1
+
+
+def test_metric_regression_still_flags(tmp_path, monkeypatch, capsys):
+    rc, out = _run(
+        tmp_path,
+        monkeypatch,
+        capsys,
+        _payload(mesh=True, server_tok_s=4.0),
+        _payload(mesh=True),
+        "--strict",
+    )
+    assert rc == 1
+    assert "REGRESSION" in out
+
+
+def test_identical_payloads_clean(tmp_path, monkeypatch, capsys):
+    rc, out = _run(
+        tmp_path,
+        monkeypatch,
+        capsys,
+        _payload(mesh=True),
+        _payload(mesh=True),
+        "--strict",
+    )
+    assert rc == 0
+    assert "GONE" not in out and "REGRESSION" not in out

@@ -140,7 +140,7 @@ def test_alloc_free_roundtrip_seeded(seed):
     _roundtrip(positions, int(rng.integers(0, SLOTS)))
 
 
-def _run_share_trace(ops) -> None:
+def _run_share_trace(ops, strategy=None) -> None:
     """Extended trace over the refcounted API: share (pin + adopt),
     copy-on-write splits, radix parking (free with a keep hook), LRU
     eviction, and host-memory swap round trips (swap_out pins the
@@ -148,8 +148,15 @@ def _run_share_trace(ops) -> None:
     the pinned prefix back and restores the host pages — mirroring the
     engine's preemption flow), with the full conservation/refcount
     invariant — including outstanding swap pins — checked after every
-    op. ``tree`` models the prefix cache's page index."""
-    kv = PagedKVCache(_tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN)
+    op. ``tree`` models the prefix cache's page index.
+
+    ``strategy`` runs the identical trace over a mesh-sharded pool
+    (``PagedKVCache(strategy=)``): the allocator is host-side and
+    layout-agnostic, so every invariant must hold unchanged while the
+    device buffers live sharded across the mesh."""
+    kv = PagedKVCache(
+        _tiny_cfg(), max_slots=SLOTS, max_len=MAX_LEN, strategy=strategy
+    )
     tree: set[int] = set()
     sm = SwapManager(kv, page_in_tree=lambda p: p in tree)
     records: list = []  # outstanding swap-outs
@@ -260,6 +267,46 @@ def test_share_cow_evict_trace_seeded(seed):
         for _ in range(int(rng.integers(10, 60)))
     ]
     _run_share_trace(ops)
+
+
+def _mesh_strategy():
+    """A (1, 8) tensor-parallel Strategy when the test process runs with
+    8 simulated host devices (scripts/tier1.sh's mesh leg), else None.
+    The tiny cfg's head_dim=8 divides tp=8, so the pool's last axis
+    shards on the model axis."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed import sharding as shd
+
+    if len(jax.devices()) < 8:
+        return None
+    sub = np.asarray(jax.devices()[:8]).reshape(1, 8)
+    return shd.Strategy(Mesh(sub, ("data", "model")), "tp")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_share_cow_evict_trace_sharded_pool(seed):
+    """The full share/COW/park/evict/swap fuzz over a pool sharded
+    across a simulated 8-device mesh: refcount conservation and swap pin
+    semantics are host-side bookkeeping and must be identical whatever
+    the device layout — COW's jit'd page copy and the swap manager's
+    gather/scatter run on sharded buffers."""
+    st = _mesh_strategy()
+    if st is None:
+        pytest.skip(
+            "needs XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+    rng = np.random.default_rng(700 + seed)
+    ops = [
+        (
+            _SHARE_OPS[int(rng.integers(0, len(_SHARE_OPS)))],
+            int(rng.integers(0, SLOTS)),
+            int(rng.integers(0, MAX_LEN)),
+        )
+        for _ in range(int(rng.integers(10, 60)))
+    ]
+    _run_share_trace(ops, strategy=st)
 
 
 def test_capacity_and_exhaustion_errors():

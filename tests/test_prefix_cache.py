@@ -486,6 +486,99 @@ def test_engine_cow_guard_preserves_stream():
     eng.kv.unpin(shared)
 
 
+def test_cow_reserve_survives_oversubscribed_pool():
+    """Regression: a COW split on a bone-dry oversubscribed pool used to
+    raise ``RuntimeError("KV cache out of pages")`` mid-decode, killing
+    every in-flight request — lifetime-page admission budgeting never
+    reserved the split's fresh page for prefix-shared sequences. Now a
+    prefix-hit admission budgets one COW reserve page: admissions that
+    would consume it are deferred, and the split always finds a page."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, page + 4, dtype=np.int32)
+    small = rng.integers(0, cfg.vocab_size, 4, dtype=np.int32)
+
+    ref_eng = Engine(
+        cfg, mesh,
+        engine_cfg=EngineConfig(max_slots=2, max_len=2 * page),
+    )
+    ref_eng.submit(prompt, 5)
+    ref = ref_eng.drain(max_steps=30)[0].tokens
+
+    # minimal oversubscribed pool: 3 allocatable pages + trash for two
+    # 2-page-lifetime slots
+    eng = Engine(
+        cfg, mesh,
+        engine_cfg=EngineConfig(
+            max_slots=2, max_len=2 * page, prefix_cache=True,
+            n_pages=4, preemption=False,
+        ),
+        params=ref_eng.params,
+    )
+    # turn 1: index the prompt's full page into the radix tree, park it
+    eng.submit(prompt, 5)
+    eng.drain(max_steps=30)
+    assert eng.kv.cached_pages == 1
+
+    # turn 2: same prompt -> adopts the shared page; its lifetime (2
+    # pages) is budgeted +1 for the COW reserve
+    eng.submit(prompt, 5)
+    eng.step()
+    slot = eng.scheduler.active()[0].slot
+    assert eng._cow_reserve[slot] == 1
+    assert eng._page_need[slot] == 3  # 2 lifetime + 1 reserve
+
+    # a small request whose single page would consume the reserve must
+    # NOT admit while the pool's last free page backs the reservation
+    eng.submit(small, 3)
+    eng.step()
+    assert len(eng.scheduler.active()) == 1
+    assert len(eng.scheduler.waiting) == 1
+
+    # fork the running slot's write page (refcount 2) and decode past
+    # the split: pre-fix this raised "KV cache out of pages"
+    shared = int(eng.kv.page_table[slot, 1])
+    eng.kv.incref(shared)
+    eng.step()
+    assert eng.stats.cow_copies == 1
+    assert eng._cow_reserve[slot] == 0
+    assert eng._page_need[slot] == 2  # reserve consumed by the split
+    fins = eng.drain(max_steps=60)
+    eng.kv.unpin(shared)
+    by_uid = {f.uid: f for f in fins}
+    np.testing.assert_array_equal(by_uid[2].tokens, ref)
+    assert by_uid[3].finish_reason in ("length", "eos")
+
+
+def test_pool_filling_request_declines_hit_instead_of_deadlocking():
+    """A request whose lifetime fills every allocatable page cannot also
+    carry the +1 COW reserve — it must decline the prefix hit (fresh
+    prefill shares nothing, so no reserve is needed) rather than wait on
+    a budget that can never be met."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    page = cfg.attn_block
+    prompt = np.random.default_rng(9).integers(
+        0, cfg.vocab_size, page + 4, dtype=np.int32
+    )
+    eng = Engine(
+        cfg, mesh,
+        engine_cfg=EngineConfig(
+            max_slots=2, max_len=2 * page, prefix_cache=True,
+            n_pages=3, preemption=False,  # one 2-page slot + trash
+        ),
+    )
+    eng.submit(prompt, 5)
+    eng.drain(max_steps=30)
+    assert eng.kv.cached_pages == 1  # the prompt page is indexed
+    eng.submit(prompt, 5)
+    fins = eng.drain(max_steps=30)
+    assert len(fins) == 1
+    assert fins[0].prefix_hit_tokens == 0  # hit declined, not adopted
+
+
 # ----------------------------------------------------------------------
 # Anti-starvation aging
 # ----------------------------------------------------------------------
