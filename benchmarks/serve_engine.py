@@ -159,6 +159,42 @@ def _measure_uniform(
     return best
 
 
+def _measure_guarded(
+    engine: Engine, prompts: np.ndarray, gen: int, *, enforce: bool
+) -> dict:
+    """One uniform wave with the steady-state decode loop inside a
+    DispatchGuard: proves (``enforce=True``, raising — the tier-1 /
+    --guards mode) or records (``enforce=False``, counting) that decode
+    performs zero recompiles and zero implicit device→host transfers
+    per step after warmup, with exactly one explicit batched fetch (the
+    next-token row) per step."""
+    from repro.analysis.guards import DispatchGuard
+
+    for b in range(prompts.shape[0]):
+        engine.submit(prompts[b], gen)
+    engine.step()  # warmup step: admission prefill + first decode
+    # Guard the steady-state middle only: requests finishing free their
+    # slots, and the resulting re-bucketing is warmup work by contract,
+    # not a per-step cost.
+    steps = max(gen - 2, 1)
+    guard = DispatchGuard(
+        max_compiles=0 if enforce else None,
+        raise_on_sync=enforce,
+    )
+    with guard:
+        for _ in range(steps):
+            engine.step()
+    engine.drain(max_steps=64 * max(gen, 1))
+    return {
+        "steps": steps,
+        "compiles": guard.compiles,
+        "implicit_d2h": guard.implicit_syncs,
+        "explicit_syncs": guard.explicit_syncs,
+        "enforced": enforce,
+        "clean": guard.compiles == 0 and guard.implicit_syncs == 0,
+    }
+
+
 def _measure_trace(
     engine: Engine,
     prompts: list[np.ndarray],
@@ -486,7 +522,7 @@ def _measure_goodput(cfg, mesh, params, batch: int, smoke: bool) -> dict:
     return rows
 
 
-def run(smoke: bool = False) -> None:
+def run(smoke: bool = False, guards: bool = False) -> None:
     cfg = registry.get_smoke(ARCH, sparse=True)
     batch, prompt_len, gen, repeats = BATCH, PROMPT_LEN, GEN, 3
     if smoke:
@@ -556,6 +592,16 @@ def run(smoke: bool = False) -> None:
     )
     other = _measure_uniform(engine_o, prompts, gen, repeats=repeats)
     by_impl[other_impl] = {k: other[k] for k in keys}
+
+    # ---- dispatch-guard scenario: the steady-state decode loop runs
+    # inside repro.analysis.guards.DispatchGuard. Counters are always
+    # recorded in the payload; under --guards (and in the --smoke tier-1
+    # gate) the guard *raises* on any recompile or implicit D2H sync, so
+    # a hot-path regression fails the run instead of just drifting a
+    # number.
+    dispatch_guard = _measure_guarded(
+        engine, prompts, gen, enforce=guards or smoke
+    )
 
     # ---- engine, mixed-length trace with mid-flight arrivals
     engine2 = Engine(
@@ -681,6 +727,7 @@ def run(smoke: bool = False) -> None:
         "prefill_heavy_speedup": ph_speedup,
         "decode_by_impl": by_impl,
         "decode_by_sampler": by_sampler,
+        "dispatch_guard": dispatch_guard,
         "prefix_cache": prefix,
         "goodput": good,
         "mesh": meshrow,
@@ -723,6 +770,15 @@ def run(smoke: bool = False) -> None:
         f";sampled_vs_greedy={by_sampler['sampled_vs_greedy']}x",
     )
     emit(
+        "serve_engine/dispatch_guard",
+        1e6 * dispatch_guard["steps"],
+        f"steps={dispatch_guard['steps']}"
+        f";compiles={dispatch_guard['compiles']}"
+        f";implicit_d2h={dispatch_guard['implicit_d2h']}"
+        f";explicit_syncs={dispatch_guard['explicit_syncs']}"
+        f";enforced={dispatch_guard['enforced']}",
+    )
+    emit(
         "serve_engine/prefix_cache",
         1e6 * prefix["on"]["prefill_s"],
         f"admission_speedup={prefix['admission_speedup']}x"
@@ -760,4 +816,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale dry run (tier-1 gate)")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--guards", action="store_true",
+                    help="enforce the dispatch guard: raise on any "
+                         "recompile or implicit device->host sync in "
+                         "the steady-state decode loop (implied by "
+                         "--smoke)")
+    _args = ap.parse_args()
+    run(smoke=_args.smoke, guards=_args.guards)

@@ -69,6 +69,8 @@ METRICS = [
         ("goodput", "chat", "turn2plus_hit_rate"),
         True,
     ),
+    ("guard compiles/step", ("dispatch_guard", "compiles"), False),
+    ("guard implicit D2H", ("dispatch_guard", "implicit_d2h"), False),
     ("mesh tp=1 decode tok/s", ("mesh", "by_tp", "1", "decode_tok_s"), True),
     ("mesh tp=8 decode tok/s", ("mesh", "by_tp", "8", "decode_tok_s"), True),
     ("mesh streams equal", ("mesh", "streams_equal"), True),
@@ -90,7 +92,7 @@ def _load_baseline(args) -> dict | None:
         try:
             with open(args.baseline) as f:
                 return json.load(f)
-        except OSError as e:
+        except (OSError, json.JSONDecodeError) as e:
             print(f"bench_diff: cannot read baseline: {e}", file=sys.stderr)
             return None
     try:
@@ -128,12 +130,19 @@ def main() -> int:
     try:
         with open(args.current) as f:
             cur = json.load(f)
-    except OSError as e:
+    except (OSError, json.JSONDecodeError) as e:
+        # Missing or unparsable benchmark output: informational in the
+        # default (tier-1, non-fatal) mode, but a hard failure under
+        # --strict — a CI job gating on benchmark drift must not pass
+        # green because the numbers it gates on don't exist.
         print(f"bench_diff: cannot read {args.current}: {e}", file=sys.stderr)
-        return 0
+        return 1 if args.strict else 0
     base = _load_baseline(args)
     if base is None:
-        return 0
+        # a missing committed baseline is a legitimate first run, but an
+        # explicitly-passed baseline file that cannot be read gates
+        # under --strict like the current file does
+        return 1 if (args.strict and args.baseline) else 0
 
     rows, flagged = [], 0
     for label, path, higher in METRICS:

@@ -17,6 +17,14 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 scripts/tier1.sh "$@"
 
+# Strict static-analysis gate: same lint as tier 1 plus the
+# only-shrinks check — a PR may remove jaxlint_baseline.txt entries
+# (fixing an accepted finding) but never add one without the reviewer
+# seeing it fail here first.
+echo "ci: jaxlint --check-baseline-growth"
+python -m repro.analysis.jaxlint src \
+    --baseline jaxlint_baseline.txt --check-baseline-growth
+
 echo "ci: scripts/bench_diff.py --strict"
 python scripts/bench_diff.py --strict \
     --baseline-ref "${BENCH_BASELINE_REF:-HEAD}"

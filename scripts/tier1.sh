@@ -21,10 +21,18 @@ if [ "$rc" -ne 0 ] && [ "$rc" -ne 5 ]; then
     echo "tier1: test collection failed" >&2
     python -m pytest -q --co "$@" || exit 1
 fi
+# Static analysis first: jaxlint is the cheapest leg (AST-only, no jax
+# import) and a hot-path violation should fail the gate before any
+# benchmark or test burns a minute. The committed baseline holds the
+# accepted findings — anything fresh, or a stale baseline entry, fails.
+echo "tier1: jaxlint src/"
+python -m repro.analysis.jaxlint src --baseline jaxlint_baseline.txt
 # Benchmark-script gate: the serving benchmark's seconds-scale dry run
 # (tiny model, every scenario, JSON to a temp dir). Catches API drift in
 # benchmarks/ that no unit test imports — breakage fails tier 1 here
-# instead of rotting until the next full benchmark run.
+# instead of rotting until the next full benchmark run. --smoke implies
+# --guards: the dispatch-guard scenario runs *enforced*, so a recompile
+# or implicit device->host sync in steady-state decode fails the gate.
 echo "tier1: benchmarks/serve_engine.py --smoke"
 python -m benchmarks.serve_engine --smoke > /dev/null
 # Trajectory report (non-fatal): how the tracked BENCH_serve.json

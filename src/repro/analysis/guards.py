@@ -1,0 +1,323 @@
+"""Runtime dispatch guards for the serving hot path.
+
+Static analysis (`repro.analysis.jaxlint`) proves hot-path invariants on
+the source tree; this module proves them at execution time.  The two
+invariants that matter for steady-state decode throughput:
+
+  1. **Zero recompiles per decode step after warmup.**  Every jit
+     program variant the engine can dispatch is traced at init
+     (`Engine.__init__` warms both the plain-argmax and fused-sampler
+     variants per bucket); a compile appearing mid-traffic means a shape
+     or static-arg leaked into the dispatch path (the PR 3 regression).
+  2. **Zero *implicit* device→host transfers per decode step.**  The one
+     sanctioned sync per step is the explicit batched `jax.device_get`
+     of the next-token row; anything else (`.item()`, `int()`/`bool()`
+     on a device array, `np.asarray`, implicit `__bool__`) serializes
+     the device stream per call (the PR 6 regression).
+
+`DispatchGuard` enforces both as a context manager:
+
+  * Compiles are counted via a `jax.monitoring` duration listener on the
+    backend-compile event — cache hits do not fire it, real compiles do.
+  * Implicit syncs are intercepted by patching the host-conversion entry
+    points on jax's `ArrayImpl` (``__array__``, ``item``, ``__bool__``,
+    ...) for the duration of the context.  This works on every backend,
+    including CPU — where `jax.transfer_guard_device_to_host` is inert
+    because arrays are already host-resident.  On accelerator backends
+    the real transfer guard is additionally armed, so DMA-level implicit
+    transfers that bypass ArrayImpl methods are caught too.
+  * `jax.device_get` stays the sanctioned explicit channel: the guard
+    wraps it to flag the conversion as intentional (and counts calls),
+    so batched fetches pass while stray scalar pulls raise.
+
+Known hole, by construction: on CPU, `np.asarray(x)` converts through
+the C-level buffer protocol (zero-copy into host-resident memory — no
+transfer exists to catch) and never reaches ``__array__``, so the
+runtime guard cannot see it there.  jaxlint's JL001 flags it statically
+instead, and on accelerator backends (no buffer protocol) the
+``__array__`` patch plus the real transfer guard do catch it.
+
+Not thread-safe: the ArrayImpl patch is process-global while the
+context is active.  The engine is single-threaded; tests and benchmarks
+use one guard at a time.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax
+
+__all__ = [
+    "hot_path",
+    "is_hot_path",
+    "HostSyncError",
+    "RecompileError",
+    "DispatchGuard",
+    "compile_events_total",
+]
+
+
+def hot_path(fn: Callable) -> Callable:
+    """Marker decorator: ``fn`` is on the serving hot path.
+
+    Purely declarative — returns ``fn`` unchanged with a ``__hot_path__``
+    attribute.  `repro.analysis.jaxlint` keys its JL001 rule (no implicit
+    host syncs) on this marker, and reviewers can grep for it to find
+    every function where a stray `.item()` is a throughput bug rather
+    than a style nit.
+    """
+    fn.__hot_path__ = True
+    return fn
+
+
+def is_hot_path(fn: Callable) -> bool:
+    return bool(getattr(fn, "__hot_path__", False))
+
+
+class HostSyncError(RuntimeError):
+    """An implicit device→host sync fired inside a DispatchGuard."""
+
+
+class RecompileError(RuntimeError):
+    """A compile fired inside a DispatchGuard that forbids compiles."""
+
+
+# ---------------------------------------------------------------------------
+# Compile counting.
+#
+# jax.monitoring has no listener-unregister API (only a global clear), so
+# we register exactly one process-lifetime listener that bumps a counter
+# whenever the backend compiles a program.  Guards snapshot the counter
+# at enter/exit.  The event name has been
+# "/jax/core/compile/backend_compile_duration" across recent jax
+# releases; substring-match to stay tolerant of path shuffles.
+# ---------------------------------------------------------------------------
+
+_compile_lock = threading.Lock()
+_compile_events = 0
+_listener_registered = False
+
+
+def _on_event_duration(event: str, duration: float, **_kw: Any) -> None:
+    global _compile_events
+    if "backend_compile" in event:
+        with _compile_lock:
+            _compile_events += 1
+
+
+def _ensure_listener() -> None:
+    global _listener_registered
+    if not _listener_registered:
+        jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
+        _listener_registered = True
+
+
+def compile_events_total() -> int:
+    """Process-lifetime count of backend compiles observed so far."""
+    _ensure_listener()
+    with _compile_lock:
+        return _compile_events
+
+
+# ---------------------------------------------------------------------------
+# Implicit-sync interception.
+#
+# jax assigns plain Python functions onto the ArrayImpl C type for its
+# host-conversion surface (e.g. ``ArrayImpl.item = jax._src.array._item``),
+# so those entry points are patchable per-context.  Special methods are
+# looked up on the type, so ``int(x)`` / ``if x:`` / ``np.asarray(x)``
+# all route through the patched functions.
+# ---------------------------------------------------------------------------
+
+_SYNC_METHODS = (
+    "__array__",
+    "__bool__",
+    "__int__",
+    "__float__",
+    "__index__",
+    "__complex__",
+    "item",
+    "tolist",
+)
+
+
+_array_impl_cls: type | None = None
+
+
+def _array_impl_type() -> type:
+    # The concrete on-device array type; committed arrays and jit outputs
+    # are instances.  Resolve lazily so import order doesn't matter, and
+    # cache it: building the probe array compiles a tiny program the
+    # first time, which must not be charged to a guarded region.
+    global _array_impl_cls
+    if _array_impl_cls is None:
+        _array_impl_cls = type(jax.numpy.zeros(()))
+    return _array_impl_cls
+
+
+@dataclasses.dataclass
+class GuardReport:
+    steps: int = 0
+    compiles: int = 0
+    implicit_syncs: int = 0
+    explicit_syncs: int = 0
+
+
+class DispatchGuard:
+    """Context manager asserting steady-state dispatch hygiene.
+
+    Inside the context:
+      * implicit host syncs on jax arrays raise :class:`HostSyncError`
+        immediately (naming the entry point), unless ``raise_on_sync``
+        is False, in which case they are only counted;
+      * `jax.device_get` is allowed and counted as an explicit sync;
+      * backend compiles are counted; if ``max_compiles`` is not None
+        and the count exceeds it, ``__exit__`` raises
+        :class:`RecompileError`.
+
+    Typical use around a steady-state decode loop::
+
+        with DispatchGuard(max_compiles=0) as g:
+            while engine.scheduler.active():
+                engine.step()
+        assert g.compiles == 0 and g.implicit_syncs == 0
+    """
+
+    def __init__(
+        self,
+        *,
+        max_compiles: int | None = 0,
+        raise_on_sync: bool = True,
+        transfer_guard: bool = True,
+    ) -> None:
+        self.max_compiles = max_compiles
+        self.raise_on_sync = raise_on_sync
+        self.transfer_guard = transfer_guard
+        self.implicit_syncs = 0
+        self.explicit_syncs = 0
+        self._compiles_at_enter = 0
+        self._compiles_at_exit: int | None = None
+        self._saved: dict[str, Any] = {}
+        self._saved_device_get: Callable | None = None
+        self._exit_stack: contextlib.ExitStack | None = None
+        self._in_explicit = False
+        self._active = False
+
+    # -- counters ----------------------------------------------------------
+
+    @property
+    def compiles(self) -> int:
+        end = (
+            self._compiles_at_exit
+            if self._compiles_at_exit is not None
+            else compile_events_total()
+        )
+        return end - self._compiles_at_enter
+
+    def report(self, steps: int = 0) -> GuardReport:
+        return GuardReport(
+            steps=steps,
+            compiles=self.compiles,
+            implicit_syncs=self.implicit_syncs,
+            explicit_syncs=self.explicit_syncs,
+        )
+
+    # -- interception ------------------------------------------------------
+
+    def _trip(self, name: str) -> None:
+        if self._in_explicit:
+            return  # inside the sanctioned jax.device_get path
+        self.implicit_syncs += 1
+        if self.raise_on_sync:
+            raise HostSyncError(
+                f"implicit device->host sync via ArrayImpl.{name} inside a "
+                "DispatchGuard. Hot-path code must batch host reads through "
+                "one explicit jax.device_get per step (jaxlint JL001)."
+            )
+
+    def _make_patch(self, name: str, orig: Callable) -> Callable:
+        guard = self
+
+        def patched(array_self, *args: Any, **kwargs: Any):
+            guard._trip(name)
+            return orig(array_self, *args, **kwargs)
+
+        patched.__name__ = name
+        return patched
+
+    def __enter__(self) -> "DispatchGuard":
+        if self._active:
+            raise RuntimeError("DispatchGuard is not reentrant")
+        _ensure_listener()
+        self._active = True
+        self._compiles_at_exit = None
+        self.implicit_syncs = 0
+        self.explicit_syncs = 0
+
+        cls = _array_impl_type()
+        self._saved = {}
+        for name in _SYNC_METHODS:
+            orig = getattr(cls, name, None)
+            if orig is None:
+                continue
+            self._saved[name] = orig
+            setattr(cls, name, self._make_patch(name, orig))
+
+        # Sanctioned explicit channel: route jax.device_get through a
+        # wrapper that suspends interception (device_get internally calls
+        # np.asarray -> __array__ on each leaf).
+        orig_get = jax.device_get
+        self._saved_device_get = orig_get
+        guard = self
+
+        def guarded_device_get(tree):
+            guard.explicit_syncs += 1
+            guard._in_explicit = True
+            try:
+                return orig_get(tree)
+            finally:
+                guard._in_explicit = False
+
+        jax.device_get = guarded_device_get
+
+        # On accelerator backends additionally arm the real transfer
+        # guard (catches DMA-level implicit transfers that never route
+        # through ArrayImpl methods).  Inert on CPU, where arrays are
+        # already host-resident.
+        self._exit_stack = contextlib.ExitStack()
+        if self.transfer_guard:
+            self._exit_stack.enter_context(
+                jax.transfer_guard_device_to_host("disallow")
+            )
+        # Snapshot last: nothing the guard's own setup does (type
+        # resolution, patching, arming the transfer guard) may count
+        # against the guarded region.
+        self._compiles_at_enter = compile_events_total()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        cls = _array_impl_type()
+        for name, orig in self._saved.items():
+            setattr(cls, name, orig)
+        self._saved = {}
+        if self._saved_device_get is not None:
+            jax.device_get = self._saved_device_get
+            self._saved_device_get = None
+        if self._exit_stack is not None:
+            self._exit_stack.close()
+            self._exit_stack = None
+        self._compiles_at_exit = compile_events_total()
+        self._active = False
+        if exc_type is not None:
+            return False
+        if self.max_compiles is not None and self.compiles > self.max_compiles:
+            raise RecompileError(
+                f"{self.compiles} backend compile(s) fired inside a "
+                f"DispatchGuard (max_compiles={self.max_compiles}). A compile "
+                "after warmup means a shape or static argument leaked into "
+                "the dispatch path (jaxlint JL003)."
+            )
+        return False

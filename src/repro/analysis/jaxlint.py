@@ -1,0 +1,1200 @@
+"""jaxlint: repo-specific JAX/Pallas static analysis.
+
+An AST-based linter whose rules are keyed to this repo's real bug
+history — each rule encodes an invariant that a past PR broke and a
+reviewer had to hand-find:
+
+  JL001  implicit host sync in a ``@hot_path`` function (``.item()``,
+         ``int()/float()/bool()/np.asarray`` on device values,
+         ``jax.device_get``, implicit ``__bool__`` via ``if``/``while``
+         on arrays).  The PR 6 regression: a per-step host upload /
+         sync serializes the device stream once per decode step.
+  JL002  Python control flow or iteration over tracer values inside a
+         ``jit``-decorated function — a trace-time concretization error
+         waiting for the first non-warmup shape.
+  JL003  recompile hazards: ``jax.jit`` constructed per call (inside a
+         non-``__init__`` function body), immediately-invoked
+         ``jax.jit(f)(x)``, container literals with static leaves at
+         known-jit call sites, f-strings over tracers, and jit'd
+         lambdas closing over locally-computed shapes.  The PR 3
+         regression: a mid-traffic recompile hiccup.
+  JL004  Pallas structural checks on kernel files: BlockSpec index-map
+         arity must equal grid rank + ``num_scalar_prefetch``,
+         validity/position refs must actually mask (the trash page
+         must not be read unmasked), and the kernel invocation must
+         pass scalar-prefetch operands first (operand count =
+         ``num_scalar_prefetch + len(in_specs)``).
+  JL005  in-jit paged-pool writes (``pool.at[...].set/add``) must pin
+         the pool layout via ``constrain_paged_pool`` /
+         ``constrain_pools`` / ``with_sharding_constraint`` in the same
+         function.  The PR 7 regression: an unconstrained sharded pool
+         write made XLA round-trip the whole KV pool.
+  JL000  malformed suppression: a ``# jaxlint: disable=...`` comment
+         without a non-empty ``-- reason`` string.
+
+Suppression: append ``# jaxlint: disable=JL001 -- why this is fine`` to
+the offending line (or the line above).  The reason is mandatory; a
+reasonless disable is itself a finding (JL000) and suppresses nothing.
+
+Accepted findings that cannot be fixed live in ``jaxlint_baseline.txt``
+(one fingerprint per line, ``fingerprint # reason``).  Fingerprints are
+line-number-independent (path : rule : function : normalized source), so
+the baseline survives unrelated edits but goes stale — and errors — the
+moment the flagged code changes.  ``--check-baseline-growth`` compares
+the baseline against the committed copy and fails on new entries: the
+baseline only shrinks.
+
+CLI::
+
+    python -m repro.analysis.jaxlint src/
+    python -m repro.analysis.jaxlint src/ --baseline jaxlint_baseline.txt
+    python -m repro.analysis.jaxlint --list-rules
+
+Scope notes (honest limits): taint tracking is per-function and
+name-based — it follows assignments from ``jnp.*`` / ``jax.*`` calls and
+from jit-built class attributes (``self._decode = jax.jit(...)``), but
+does not cross function boundaries; JL002 applies to literally
+jit-decorated defs (functions merely *called* under jit are covered at
+runtime by ``repro.analysis.guards``); JL004 skips call sites whose
+grids / spec lists it cannot resolve to literals.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+__all__ = [
+    "Finding",
+    "lint_source",
+    "lint_paths",
+    "load_baseline",
+    "main",
+    "RULES",
+]
+
+RULES = {
+    "JL000": "malformed jaxlint suppression (missing '-- reason')",
+    "JL001": "implicit host sync in a @hot_path function",
+    "JL002": "Python control flow over tracer values inside jit",
+    "JL003": "recompile hazard at a jit boundary",
+    "JL004": "Pallas kernel structural violation",
+    "JL005": "in-jit paged-pool write without a sharding constraint",
+}
+
+HINTS = {
+    "JL000": "write '# jaxlint: disable=JLxxx -- <non-empty reason>'",
+    "JL001": "batch host reads into one explicit jax.device_get per step, "
+    "or hoist the conversion out of the hot path",
+    "JL002": "use jax.lax.cond/while_loop/fori_loop, or lift the value to "
+    "a static argument",
+    "JL003": "construct jits once (module scope or __init__) and mark "
+    "non-array arguments static",
+    "JL004": "index maps take grid indices then scalar-prefetch refs; "
+    "mask trash-page reads by logical position; prefetch operands first",
+    "JL005": "route the write through constrain_paged_pool / "
+    "sharding.constrain_pools so GSPMD keeps the pool layout in place",
+}
+
+_POOL_NAMES = {"kc", "vc", "k_pages", "v_pages"}
+_POOL_CONTAINERS = {"cache", "caches", "pool", "pools"}
+_POOL_TREE_ARGS = {"pool", "pools", "buffers", "caches"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+_MASK_PARAM_RE = re.compile(r"(^|_)(valid|keep|pos|mask)")
+_SUPPRESS_RE = re.compile(
+    r"#\s*jaxlint:\s*disable=([A-Za-z0-9,\s]+?)\s*(?:--\s*(.*?))?\s*$"
+)
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+    func: str = "<module>"
+    snippet: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        norm = " ".join(self.snippet.split())
+        return f"{self.path}:{self.code}:{self.func}:{norm}"
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: {self.code} "
+            f"{self.message}\n    hint: {HINTS[self.code]}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _full_name(node: ast.AST) -> str:
+    """Dotted name of a Name/Attribute chain ('' when not a pure chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit(...)`` / ``pjit(...)`` calls, including
+    ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = _full_name(node.func)
+    if name in ("jax.jit", "jit", "jax.pjit", "pjit"):
+        return True
+    if name in ("functools.partial", "partial") and node.args:
+        return _full_name(node.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if _full_name(dec) in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call) and _is_jit_expr(dec):
+            return True
+        if isinstance(dec, ast.Call) and _full_name(dec.func) in (
+            "functools.partial",
+            "partial",
+        ):
+            if dec.args and _full_name(dec.args[0]) in ("jax.jit", "jit"):
+                return True
+    return False
+
+
+def _is_hot_path(fn: ast.FunctionDef) -> bool:
+    return any(
+        _full_name(d).split(".")[-1] == "hot_path" for d in fn.decorator_list
+    )
+
+
+def _arrayish_annotation(ann: ast.AST | None) -> bool:
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return "Array" in ann.value or "ndarray" in ann.value
+    name = _full_name(ann)
+    return "Array" in name or "ndarray" in name
+
+
+def _uses_shape(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Attribute) and n.attr == "shape"
+        for n in ast.walk(node)
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-function taint: which local names hold device values / tracers
+# ---------------------------------------------------------------------------
+
+
+class _Taint:
+    """Name-based forward dataflow over one function body.
+
+    ``device`` holds local names believed to reference on-device arrays
+    (or tracers).  Sources: ``jnp.*`` / ``jax.*`` call results, calls
+    through jit-built attributes (``self._decode(...)``), and — for jit
+    functions — parameters with array-ish annotations.  Conversions
+    (``jax.device_get``, ``np.asarray``, ``int()``...) produce host
+    values.  Two passes over the body propagate loop-carried taint.
+    """
+
+    _HOST_CALLS = {
+        "jax.device_get",
+        "np.asarray",
+        "np.array",
+        "int",
+        "float",
+        "bool",
+        "len",
+        "str",
+        "list",
+        "tuple",
+        "range",
+        "time.perf_counter",
+    }
+
+    def __init__(self, jit_attrs: set[str], seed: set[str] | None = None):
+        self.jit_attrs = jit_attrs
+        self.device: set[str] = set(seed or ())
+
+    def run(self, fn: ast.FunctionDef) -> None:
+        for _ in range(2):  # fixpoint-ish: covers loop-carried names
+            for stmt in fn.body:
+                self._stmt(stmt)
+
+    # -- classification ------------------------------------------------
+
+    def is_device(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.device
+        if isinstance(node, ast.Subscript):
+            return self.is_device(node.value)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_device(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_is_device(node)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_device(e) for e in node.elts)
+        if isinstance(node, ast.BinOp):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.Compare):
+            # `x is None` and friends produce Python bools statically
+            if all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+            ):
+                return False
+            return self.is_device(node.left) or any(
+                self.is_device(c) for c in node.comparators
+            )
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_device(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        return False
+
+    def _call_is_device(self, call: ast.Call) -> bool:
+        name = _full_name(call.func)
+        if name in self._HOST_CALLS or name.startswith("np."):
+            return False
+        if name == "isinstance":
+            return False
+        if name.startswith("jnp.") or name.startswith("jax.numpy"):
+            return True
+        if name.startswith("self.") and name.count(".") == 1:
+            return name.split(".", 1)[1] in self.jit_attrs
+        if name in ("jax.block_until_ready",):
+            return bool(call.args) and self.is_device(call.args[0])
+        if name.startswith("jax.lax.") or name == "jax.device_put":
+            return True
+        # method on a device value (x.astype(...), x.reshape(...))
+        if isinstance(call.func, ast.Attribute) and self.is_device(
+            call.func.value
+        ):
+            return True
+        return False
+
+    # -- statement walk ------------------------------------------------
+
+    def _assign_target(self, target: ast.AST, is_dev: bool) -> None:
+        if isinstance(target, ast.Name):
+            if is_dev:
+                self.device.add(target.id)
+            else:
+                self.device.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._assign_target(el, is_dev)
+        # attribute/subscript targets: no local name to taint
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            val_dev = self.is_device(stmt.value)
+            if (
+                len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], (ast.Tuple, ast.List))
+                and isinstance(stmt.value, (ast.Tuple, ast.List))
+                and len(stmt.targets[0].elts) == len(stmt.value.elts)
+            ):
+                for t, v in zip(stmt.targets[0].elts, stmt.value.elts):
+                    self._assign_target(t, self.is_device(v))
+                return
+            for t in stmt.targets:
+                self._assign_target(t, val_dev)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            if stmt.value is not None:
+                self._assign_target(stmt.target, self.is_device(stmt.value))
+        elif isinstance(stmt, (ast.If, ast.While)):
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+        elif isinstance(stmt, ast.For):
+            self._assign_target(stmt.target, self.is_device(stmt.iter))
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+        elif isinstance(stmt, ast.With):
+            for s in stmt.body:
+                self._stmt(s)
+        elif isinstance(stmt, ast.Try):
+            for block in (stmt.body, stmt.orelse, stmt.finalbody):
+                for s in block:
+                    self._stmt(s)
+            for h in stmt.handlers:
+                for s in h.body:
+                    self._stmt(s)
+
+
+# ---------------------------------------------------------------------------
+# the linter
+# ---------------------------------------------------------------------------
+
+
+class _ModuleLinter:
+    def __init__(self, path: str, source: str, *, kernel_file: bool):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.kernel_file = kernel_file
+        self.findings: list[Finding] = []
+        self.jit_attrs: set[str] = set()  # self.X = jax.jit(...) anywhere
+        self.module_jits: set[str] = set()  # module-level jit'd callables
+        self.local_defs: dict[str, ast.FunctionDef] = {}
+
+    # -- plumbing ------------------------------------------------------
+
+    def _snippet(self, node: ast.AST) -> str:
+        line = getattr(node, "lineno", 1)
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def flag(self, node: ast.AST, code: str, message: str, func: str) -> None:
+        self.findings.append(
+            Finding(
+                path=self.path,
+                line=getattr(node, "lineno", 1),
+                col=getattr(node, "col_offset", 0),
+                code=code,
+                message=message,
+                func=func,
+                snippet=self._snippet(node),
+            )
+        )
+
+    # -- entry ---------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        try:
+            tree = ast.parse(self.source, filename=self.path)
+        except SyntaxError as exc:
+            self.findings.append(
+                Finding(
+                    path=self.path,
+                    line=exc.lineno or 1,
+                    col=exc.offset or 0,
+                    code="JL000",
+                    message=f"syntax error: {exc.msg}",
+                )
+            )
+            return self.findings
+
+        self._collect(tree)
+        self._walk_functions(tree, qual="")
+        self._check_module_level_jl003(tree)
+        self._walk_jl005(tree, qual="")
+        if self.kernel_file:
+            self._check_pallas(tree)
+        self._apply_suppressions()
+        return self.findings
+
+    def _collect(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and _is_jit_expr(node.value):
+                for t in node.targets:
+                    name = _full_name(t)
+                    if name.startswith("self."):
+                        self.jit_attrs.add(name.split(".", 1)[1])
+                    elif isinstance(t, ast.Name):
+                        self.module_jits.add(t.id)
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ) and _is_jit_decorated(node):
+                self.module_jits.add(node.name)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                # nested defs included: Pallas index maps usually live
+                # inside the kernel builder (first binding wins on the
+                # rare name collision)
+                self.local_defs.setdefault(node.name, node)
+
+    def _walk_functions(self, scope: ast.AST, qual: str) -> None:
+        for node in ast.iter_child_nodes(scope):
+            if isinstance(node, ast.ClassDef):
+                self._walk_functions(node, f"{qual}{node.name}.")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = f"{qual}{node.name}"
+                self._lint_function(node, name)
+                self._walk_functions(node, f"{name}.")
+
+    # -- JL001 ---------------------------------------------------------
+
+    def _lint_function(self, fn: ast.FunctionDef, qual: str) -> None:
+        hot = _is_hot_path(fn)
+        jit = _is_jit_decorated(fn)
+        if hot:
+            taint = _Taint(self.jit_attrs)
+            taint.run(fn)
+            self._check_hot_path(fn, qual, taint)
+        if jit:
+            seed = {
+                a.arg
+                for a in fn.args.args + fn.args.kwonlyargs
+                if _arrayish_annotation(a.annotation)
+            }
+            taint = _Taint(self.jit_attrs, seed=seed)
+            taint.run(fn)
+            self._check_jit_body(fn, qual, taint)
+        self._check_jl003_in_function(fn, qual)
+
+    def _own_nodes(self, fn: ast.FunctionDef):
+        """Walk fn's body without descending into nested defs."""
+        stack: list[ast.AST] = list(fn.body)
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _check_hot_path(
+        self, fn: ast.FunctionDef, qual: str, taint: _Taint
+    ) -> None:
+        for node in self._own_nodes(fn):
+            if isinstance(node, ast.Call):
+                name = _full_name(node.func)
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                ):
+                    self.flag(
+                        node,
+                        "JL001",
+                        ".item() forces a per-call device sync on the "
+                        "hot path",
+                        qual,
+                    )
+                elif name == "jax.device_get":
+                    self.flag(
+                        node,
+                        "JL001",
+                        "jax.device_get on the hot path — syncs are "
+                        "budgeted at one batched fetch per step "
+                        "(suppress with a reason where sanctioned)",
+                        qual,
+                    )
+                elif name in ("int", "float", "bool") and any(
+                    taint.is_device(a) for a in node.args
+                ):
+                    self.flag(
+                        node,
+                        "JL001",
+                        f"{name}() on a device value forces an implicit "
+                        "host sync",
+                        qual,
+                    )
+                elif name in ("np.asarray", "np.array") and any(
+                    taint.is_device(a) for a in node.args
+                ):
+                    self.flag(
+                        node,
+                        "JL001",
+                        f"{name}() on a device value is an implicit "
+                        "device->host transfer",
+                        qual,
+                    )
+                elif name in ("jax.tree.map", "jax.tree_map") and any(
+                    _full_name(a) in ("np.asarray", "np.array")
+                    for a in node.args
+                ):
+                    self.flag(
+                        node,
+                        "JL001",
+                        "mapping np.asarray over a device tree syncs "
+                        "once per leaf",
+                        qual,
+                    )
+            elif isinstance(node, (ast.If, ast.While)):
+                if taint.is_device(node.test):
+                    self.flag(
+                        node,
+                        "JL001",
+                        "branching on a device value triggers implicit "
+                        "__bool__ (a blocking sync)",
+                        qual,
+                    )
+
+    # -- JL002 ---------------------------------------------------------
+
+    def _check_jit_body(
+        self, fn: ast.FunctionDef, qual: str, taint: _Taint
+    ) -> None:
+        for node in self._own_nodes(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                if taint.is_device(node.test):
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    self.flag(
+                        node,
+                        "JL002",
+                        f"`{kw}` over a tracer inside jit concretizes at "
+                        "trace time",
+                        qual,
+                    )
+            elif isinstance(node, ast.For):
+                it = node.iter
+                if isinstance(it, ast.Call) and _full_name(it.func) in (
+                    "range",
+                    "enumerate",
+                    "zip",
+                    "len",
+                ):
+                    if not any(taint.is_device(a) for a in it.args):
+                        continue
+                if taint.is_device(it):
+                    self.flag(
+                        node,
+                        "JL002",
+                        "Python iteration over a tracer inside jit "
+                        "unrolls (or fails) at trace time",
+                        qual,
+                    )
+            elif isinstance(node, ast.JoinedStr):
+                for part in node.values:
+                    if isinstance(
+                        part, ast.FormattedValue
+                    ) and taint.is_device(part.value):
+                        self.flag(
+                            node,
+                            "JL002",
+                            "f-string over a tracer concretizes it at "
+                            "trace time",
+                            qual,
+                        )
+                        break
+
+    # -- JL003 ---------------------------------------------------------
+
+    def _check_jl003_in_function(
+        self, fn: ast.FunctionDef, qual: str
+    ) -> None:
+        # jit construction per call: anywhere except __init__ (engines
+        # legitimately build their program variants there) — module
+        # scope is handled separately.
+        if fn.name != "__init__":
+            for node in self._own_nodes(fn):
+                if isinstance(node, ast.Call) and _is_jit_expr(node):
+                    self.flag(
+                        node,
+                        "JL003",
+                        "jax.jit constructed inside a function body: a "
+                        "fresh jit wrapper per call defeats the "
+                        "compile cache",
+                        qual,
+                    )
+        # shape-closure lambdas: jit(lambda ...) capturing a local that
+        # was assigned from a .shape expression silently specializes.
+        shape_locals = {
+            _full_name(t)
+            for node in self._own_nodes(fn)
+            if isinstance(node, ast.Assign) and _uses_shape(node.value)
+            for t in node.targets
+            if isinstance(t, ast.Name)
+        }
+        if shape_locals:
+            for node in self._own_nodes(fn):
+                if not (isinstance(node, ast.Call) and _is_jit_expr(node)):
+                    continue
+                for arg in node.args:
+                    if not isinstance(arg, ast.Lambda):
+                        continue
+                    params = {a.arg for a in arg.args.args}
+                    captured = {
+                        n.id
+                        for n in ast.walk(arg.body)
+                        if isinstance(n, ast.Name)
+                        and n.id in shape_locals
+                        and n.id not in params
+                    }
+                    if captured:
+                        self.flag(
+                            node,
+                            "JL003",
+                            "jit'd lambda closes over locally-computed "
+                            f"shape(s) {sorted(captured)} — the program "
+                            "silently specializes per shape",
+                            qual,
+                        )
+        self._check_jit_callsites(fn, qual)
+
+    def _check_module_level_jl003(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Call)
+                and _is_jit_expr(node.func)
+            ):
+                self.flag(
+                    node,
+                    "JL003",
+                    "immediately-invoked jax.jit(f)(...) builds and "
+                    "drops the wrapper: the compile cache entry dies "
+                    "with it",
+                    "<module>",
+                )
+
+    def _check_jit_callsites(self, fn: ast.FunctionDef, qual: str) -> None:
+        """Container literals with static-ish leaves at known-jit call
+        sites: a dict/list whose leaves are Python constants hashes into
+        the pytree structure, so every distinct value recompiles."""
+        known = self.module_jits | {f"self.{a}" for a in self.jit_attrs}
+        for node in self._own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _full_name(node.func)
+            if name not in known:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, (ast.Dict, ast.List, ast.Set)):
+                    elts = (
+                        list(arg.values)
+                        if isinstance(arg, ast.Dict)
+                        else list(arg.elts)
+                    )
+                    if any(
+                        isinstance(e, (ast.Constant, ast.JoinedStr))
+                        for e in elts
+                    ):
+                        self.flag(
+                            node,
+                            "JL003",
+                            f"call to jit'd `{name}` passes a container "
+                            "literal with constant leaves — each "
+                            "distinct value recompiles; mark it static "
+                            "or pass arrays",
+                            qual,
+                        )
+                        break
+
+    # -- JL004 ---------------------------------------------------------
+
+    def _check_pallas(self, tree: ast.Module) -> None:
+        # grid is often a local name (`grid = (b, hk, w)`): resolve
+        # tuple-literal assignments anywhere in the module (names are
+        # function-local in practice, collisions would only widen the
+        # skip set).
+        grid_ranks: dict[str, int] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and isinstance(
+                node.value, (ast.Tuple, ast.List)
+            ):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        grid_ranks[t.id] = len(node.value.elts)
+
+        for call in ast.walk(tree):
+            if not isinstance(call, ast.Call):
+                continue
+            name = _full_name(call.func)
+            if name.split(".")[-1] != "PrefetchScalarGridSpec":
+                continue
+            kwargs = {k.arg: k.value for k in call.keywords if k.arg}
+            n_pref = kwargs.get("num_scalar_prefetch")
+            grid = kwargs.get("grid")
+            in_specs = kwargs.get("in_specs")
+            if not isinstance(n_pref, ast.Constant):
+                continue  # dynamic prefetch count: unresolvable
+            k = int(n_pref.value)
+            rank = None
+            if isinstance(grid, (ast.Tuple, ast.List)):
+                rank = len(grid.elts)
+            elif isinstance(grid, ast.Name):
+                rank = grid_ranks.get(grid.id)
+            if rank is not None and in_specs is not None:
+                self._check_index_maps(in_specs, rank, k)
+            out_specs = kwargs.get("out_specs")
+            if rank is not None and out_specs is not None:
+                self._check_index_maps(out_specs, rank, k)
+            if isinstance(in_specs, (ast.Tuple, ast.List)):
+                self._check_operand_count(tree, call, k, len(in_specs.elts))
+
+        self._check_mask_refs(tree)
+
+    def _index_map_arity(self, spec: ast.Call) -> tuple[ast.AST, int] | None:
+        cand = None
+        for kw in spec.keywords:
+            if kw.arg == "index_map":
+                cand = kw.value
+        if cand is None and len(spec.args) >= 2:
+            cand = spec.args[1]
+        if cand is None:
+            return None
+        if isinstance(cand, ast.Lambda):
+            return cand, len(cand.args.args)
+        if isinstance(cand, ast.Name) and cand.id in self.local_defs:
+            d = self.local_defs[cand.id]
+            return cand, len(d.args.args)
+        return None
+
+    def _check_index_maps(self, specs: ast.AST, rank: int, k: int) -> None:
+        spec_nodes = (
+            specs.elts if isinstance(specs, (ast.Tuple, ast.List)) else [specs]
+        )
+        for spec in spec_nodes:
+            if not (
+                isinstance(spec, ast.Call)
+                and _full_name(spec.func).split(".")[-1] == "BlockSpec"
+            ):
+                continue
+            got = self._index_map_arity(spec)
+            if got is None:
+                continue
+            node, arity = got
+            want = rank + k
+            if arity != want:
+                self.flag(
+                    spec,
+                    "JL004",
+                    f"BlockSpec index map takes {arity} args but the "
+                    f"grid has rank {rank} with {k} scalar-prefetch "
+                    f"operand(s): expected {want} (grid indices first, "
+                    "then prefetch refs)",
+                    "<module>",
+                )
+
+    def _check_operand_count(
+        self, tree: ast.Module, spec_call: ast.Call, k: int, n_in: int
+    ) -> None:
+        """The pallas_call invocation must pass prefetch operands first:
+        operand count == num_scalar_prefetch + len(in_specs)."""
+        for call in ast.walk(tree):
+            if not (
+                isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Call)
+                and _full_name(call.func.func).split(".")[-1] == "pallas_call"
+            ):
+                continue
+            uses_spec = any(n is spec_call for n in ast.walk(call.func))
+            if not uses_spec:
+                continue
+            if any(
+                isinstance(a, ast.Starred) for a in call.args
+            ) or call.keywords:
+                continue  # dynamic operand list: unresolvable
+            got = len(call.args)
+            want = k + n_in
+            if got != want:
+                self.flag(
+                    call,
+                    "JL004",
+                    f"pallas_call invocation passes {got} operand(s) "
+                    f"but the grid spec declares {k} scalar-prefetch + "
+                    f"{n_in} in_specs = {want} (prefetch operands must "
+                    "come first)",
+                    "<module>",
+                )
+
+    def _kernel_body_names(self, tree: ast.Module) -> set[str]:
+        """Names of functions passed (possibly through functools.partial,
+        inline or via a local binding) as the first pallas_call arg."""
+        partial_of: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and _full_name(node.value.func)
+                in ("functools.partial", "partial")
+                and node.value.args
+            ):
+                tgt = _full_name(node.value.args[0])
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        partial_of[t.id] = tgt
+        names: set[str] = set()
+        for node in ast.walk(tree):
+            if not (
+                isinstance(node, ast.Call)
+                and _full_name(node.func).split(".")[-1] == "pallas_call"
+                and node.args
+            ):
+                continue
+            a0 = node.args[0]
+            if (
+                isinstance(a0, ast.Call)
+                and _full_name(a0.func) in ("functools.partial", "partial")
+                and a0.args
+            ):
+                nm = _full_name(a0.args[0])
+            else:
+                nm = _full_name(a0)
+            nm = partial_of.get(nm, nm)
+            if nm:
+                names.add(nm.split(".")[-1])
+        return names
+
+    def _check_mask_refs(self, tree: ast.Module) -> None:
+        """A *kernel-body* parameter named like a validity/position ref
+        that is never used in a comparison or a pl.when/jnp.where guard
+        means the trash page (or bucket padding) is being read unmasked.
+        Index maps take the same prefetch refs but only compute block
+        indices, so only the function(s) actually passed to pallas_call
+        are held to this."""
+        bodies = self._kernel_body_names(tree)
+        for fn in ast.walk(tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            if fn.name not in bodies:
+                continue
+            mask_params = [
+                a.arg
+                for a in fn.args.args
+                if _MASK_PARAM_RE.search(a.arg) and a.arg.endswith("_ref")
+            ]
+            if not mask_params:
+                continue
+            guarded: set[str] = set()
+            for node in ast.walk(fn):
+                names = set()
+                if isinstance(node, ast.Compare):
+                    names = {
+                        n.id
+                        for sub in [node.left, *node.comparators]
+                        for n in ast.walk(sub)
+                        if isinstance(n, ast.Name)
+                    }
+                elif isinstance(node, ast.Call) and _full_name(
+                    node.func
+                ).split(".")[-1] in ("when", "where", "select"):
+                    names = {
+                        n.id
+                        for a in node.args
+                        for n in ast.walk(a)
+                        if isinstance(n, ast.Name)
+                    }
+                guarded |= names & set(mask_params)
+            for p in mask_params:
+                if p not in guarded:
+                    self.flag(
+                        fn,
+                        "JL004",
+                        f"kernel `{fn.name}` takes validity ref `{p}` "
+                        "but never masks with it — trash-page / "
+                        "padding lanes leak into the output",
+                        fn.name,
+                    )
+
+    # -- JL005 ---------------------------------------------------------
+
+    def _pool_params(self, fn_or_lambda, tree_call: ast.Call) -> set[str]:
+        """Params of a callable passed to jax.tree.map whose sibling
+        tree args look like paged pools."""
+        poolish = False
+        for a in tree_call.args[1:]:
+            name = _full_name(a)
+            base = name.split(".")[-1] if name else ""
+            if base in _POOL_TREE_ARGS:
+                poolish = True
+        if not poolish:
+            return set()
+        args = fn_or_lambda.args.args
+        return {a.arg for a in args}
+
+    def _is_pool_expr(self, node: ast.AST, pool_params: set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in _POOL_NAMES or node.id in pool_params
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            return (
+                isinstance(base, ast.Name) and base.id in _POOL_CONTAINERS
+            )
+        if isinstance(node, ast.Attribute):
+            return node.attr == "buffers"
+        return False
+
+    def _check_jl005(
+        self, fn: ast.FunctionDef, qual: str, pool_params: set[str]
+    ) -> None:
+        has_constraint = any(
+            isinstance(n, ast.Call)
+            and (
+                "constrain" in _full_name(n.func).split(".")[-1]
+                or _full_name(n.func).endswith("with_sharding_constraint")
+            )
+            for n in ast.walk(fn)
+        )
+        if has_constraint:
+            return
+        for node in ast.walk(fn):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("set", "add")
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"
+            ):
+                continue
+            target = node.func.value.value.value
+            if self._is_pool_expr(target, pool_params):
+                self.flag(
+                    node,
+                    "JL005",
+                    "paged-pool write without a sharding constraint in "
+                    "the same function: GSPMD may materialize and "
+                    "reshard the whole pool around this .at[...] "
+                    "update (the PR 7 bug)",
+                    qual,
+                )
+
+    def _walk_jl005(self, scope: ast.AST, qual: str) -> None:
+        """JL005 needs tree.map context: lambdas passed to jax.tree.map
+        inherit pool taint from sibling args, and the nearest enclosing
+        def must carry the constraint."""
+        for node in ast.iter_child_nodes(scope):
+            if isinstance(node, ast.ClassDef):
+                self._walk_jl005(node, f"{qual}{node.name}.")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = f"{qual}{node.name}"
+                pool_params: set[str] = set()
+                for n in ast.walk(node):
+                    if isinstance(n, ast.Call) and _full_name(n.func) in (
+                        "jax.tree.map",
+                        "jax.tree_map",
+                        "jax.tree_util.tree_map",
+                    ):
+                        if n.args and isinstance(n.args[0], ast.Lambda):
+                            pool_params |= self._pool_params(n.args[0], n)
+                self._check_jl005(node, name, pool_params)
+                self._walk_jl005(node, f"{name}.")
+
+    # -- suppression ---------------------------------------------------
+
+    def _apply_suppressions(self) -> None:
+        sup: dict[int, set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            reason = (m.group(2) or "").strip()
+            if not reason:
+                self.findings.append(
+                    Finding(
+                        path=self.path,
+                        line=i,
+                        col=0,
+                        code="JL000",
+                        message="suppression without a reason ('-- why') "
+                        "suppresses nothing",
+                        func="<comment>",
+                        snippet=line.strip(),
+                    )
+                )
+                continue
+            # applies to findings on this line and the next (comment-
+            # above style)
+            sup.setdefault(i, set()).update(codes)
+            sup.setdefault(i + 1, set()).update(codes)
+        if sup:
+            self.findings = [
+                f
+                for f in self.findings
+                if f.code == "JL000" or f.code not in sup.get(f.line, set())
+            ]
+
+
+# ---------------------------------------------------------------------------
+# public API / CLI
+# ---------------------------------------------------------------------------
+
+
+def _is_kernel_file(path: str, source: str) -> bool:
+    return "/kernels/" in path.replace("\\", "/") or "pallas" in source
+
+
+def lint_source(
+    source: str, path: str = "<string>", *, kernel_file: bool | None = None
+) -> list[Finding]:
+    if kernel_file is None:
+        kernel_file = _is_kernel_file(path, source)
+    return _ModuleLinter(path, source, kernel_file=kernel_file).run()
+
+
+def _iter_py_files(paths: list[str]):
+    for p in paths:
+        pth = Path(p)
+        if pth.is_dir():
+            yield from sorted(pth.rglob("*.py"))
+        elif pth.suffix == ".py":
+            yield pth
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    for f in _iter_py_files(paths):
+        src = f.read_text()
+        findings.extend(
+            lint_source(src, str(f), kernel_file=_is_kernel_file(str(f), src))
+        )
+    return findings
+
+
+def load_baseline(path: Path) -> dict[str, str]:
+    """``fingerprint # reason`` per line; reasons are mandatory."""
+    entries: dict[str, str] = {}
+    for i, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        fp, _, reason = line.partition(" # ")
+        fp, reason = fp.strip(), reason.strip()
+        if not reason:
+            raise ValueError(
+                f"{path}:{i}: baseline entry without a ' # reason' — "
+                "accepted findings must say why they are accepted"
+            )
+        entries[fp] = reason
+    return entries
+
+
+def _committed_baseline(path: Path) -> set[str] | None:
+    """Fingerprints in the committed (HEAD) copy of the baseline, or
+    None when HEAD has no such file (first PR introducing it)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path.name}"],
+            cwd=path.parent,
+            capture_output=True,
+            text=True,
+        )
+    except OSError:
+        return None
+    if out.returncode != 0:
+        return None
+    fps = set()
+    for raw in out.stdout.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        fps.add(line.partition(" # ")[0].strip())
+    return fps
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.jaxlint",
+        description="repo-specific JAX/Pallas static analysis",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help="accepted-findings file (fingerprint # reason per line)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        type=Path,
+        default=None,
+        help="write current findings as a baseline skeleton and exit",
+    )
+    ap.add_argument(
+        "--check-baseline-growth",
+        action="store_true",
+        help="fail if the baseline gained entries vs the committed copy",
+    )
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, desc in sorted(RULES.items()):
+            print(f"{code}  {desc}\n       fix: {HINTS[code]}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given")
+
+    findings = lint_paths(args.paths)
+
+    if args.write_baseline is not None:
+        lines = [
+            "# jaxlint baseline: accepted findings. Every entry needs a",
+            "# ' # reason'. This file only shrinks (checked in CI).",
+        ]
+        for f in sorted(findings, key=lambda f: f.fingerprint):
+            lines.append(f"{f.fingerprint} # FIXME-reason")
+        args.write_baseline.write_text("\n".join(lines) + "\n")
+        print(
+            f"wrote {len(findings)} entr(y|ies) to {args.write_baseline}; "
+            "replace every FIXME-reason before committing"
+        )
+        return 0
+
+    baseline: dict[str, str] = {}
+    if args.baseline is not None and args.baseline.exists():
+        try:
+            baseline = load_baseline(args.baseline)
+        except ValueError as exc:
+            print(f"jaxlint: {exc}", file=sys.stderr)
+            return 2
+
+    if args.check_baseline_growth and args.baseline is not None:
+        committed = _committed_baseline(args.baseline)
+        if committed is not None:
+            grown = set(baseline) - committed
+            if grown:
+                print(
+                    "jaxlint: baseline grew by "
+                    f"{len(grown)} entr(y|ies) vs the committed copy — "
+                    "the baseline only shrinks; fix the finding or "
+                    "suppress it inline with a reason:",
+                    file=sys.stderr,
+                )
+                for fp in sorted(grown):
+                    print(f"  + {fp}", file=sys.stderr)
+                return 1
+
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    matched = {f.fingerprint for f in findings if f.fingerprint in baseline}
+    stale = set(baseline) - matched
+
+    rc = 0
+    for f in sorted(fresh, key=lambda f: (f.path, f.line)):
+        print(f.render())
+        rc = 1
+    if stale:
+        print(
+            f"jaxlint: {len(stale)} stale baseline entr(y|ies) — the "
+            "flagged code changed or was fixed; remove them (the "
+            "baseline only shrinks):",
+            file=sys.stderr,
+        )
+        for fp in sorted(stale):
+            print(f"  - {fp}", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        n_sup = len(findings) - len(fresh)
+        print(f"jaxlint: clean ({n_sup} baselined finding(s))")
+    else:
+        print(
+            f"jaxlint: {len(fresh)} finding(s), {len(stale)} stale "
+            f"baseline entr(y|ies)",
+            file=sys.stderr,
+        )
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

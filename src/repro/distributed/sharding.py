@@ -34,6 +34,7 @@ __all__ = [
     "batch_specs",
     "cache_specs",
     "named",
+    "constrain_pools",
 ]
 
 
@@ -205,6 +206,23 @@ def param_specs(st: Strategy, params) -> Any:
 def named(mesh_or_st, tree):
     mesh = mesh_or_st.mesh if isinstance(mesh_or_st, Strategy) else mesh_or_st
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+
+def constrain_pools(pools, shardings):
+    """Pin the paged-pool layout on an in-jit pool write (the PR 7
+    invariant jaxlint enforces as JL005): without the constraint GSPMD
+    is free to materialize the whole pool under a different layout
+    around the ``.at[...].set`` and reshard it back.  ``shardings`` is
+    the pool-shaped tree of ``NamedSharding`` from ``PagedKVCache`` (or
+    None on a single-device engine, where this is a no-op).  Unlike the
+    ``PartitionSpec``-based ``layers.constrain_paged_pool``, a
+    ``NamedSharding`` carries its mesh, so callers need no ambient
+    ``with mesh:`` context."""
+    if shardings is None:
+        return pools
+    return jax.tree.map(
+        lambda b, s: jax.lax.with_sharding_constraint(b, s), pools, shardings
+    )
 
 
 def param_shardings(st: Strategy, params):

@@ -29,6 +29,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.guards import hot_path
 from repro.configs.base import GroupSpec, ModelConfig
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -567,6 +568,7 @@ def decode_step(
     return logits, new_caches
 
 
+@hot_path
 def decode_step_paged(
     cfg: ModelConfig,
     params: dict,

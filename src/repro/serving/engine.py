@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import hot_path
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding
 from repro.models import transformer as T
@@ -514,6 +515,7 @@ class Engine:
         else:
             self._fancy_slots.add(slot)
 
+    @hot_path
     def _decode_sampler(self) -> dict:
         """The slot-indexed sampling state for decode steps. Fully
         device-cached between admissions — the per-request sample index
@@ -973,7 +975,8 @@ class Engine:
                     self.kv.buffers,
                     jnp.asarray(rows),
                 )
-            toks = np.asarray(jax.block_until_ready(toks_dev))
+            # admission-time sync: one batched fetch per prefill group
+            toks = jax.device_get(toks_dev)
         dt = time.perf_counter() - t0
         now = time.perf_counter()
         self.stats.record_prefill(
@@ -999,6 +1002,7 @@ class Engine:
         return states
 
     # ---- stepping ----------------------------------------------------
+    @hot_path
     def step(self) -> list[FinishedRequest]:
         """One scheduler iteration: admit (batched, possibly after
         preempting) -> resume swapped sequences -> decode -> evict.
@@ -1055,7 +1059,7 @@ class Engine:
                             self.kv.buffers,
                             jnp.asarray(tokens),
                             jnp.asarray(positions),
-                            jnp.asarray(self.kv.page_table),
+                            self.kv.device_table(),
                             self._decode_sampler(),
                             self._presence,
                         )
@@ -1066,9 +1070,13 @@ class Engine:
                         self.kv.buffers,
                         jnp.asarray(tokens),
                         jnp.asarray(positions),
-                        jnp.asarray(self.kv.page_table),
+                        self.kv.device_table(),
                     )
-                nxt = np.asarray(jax.block_until_ready(toks_dev))
+                # THE one sanctioned host sync per decode step: a single
+                # batched (slots,) fetch of every active slot's next
+                # token. Everything downstream (EOS checks, finish
+                # bookkeeping) reads this numpy row, never the device.
+                nxt = jax.device_get(toks_dev)  # jaxlint: disable=JL001 -- the one batched per-step fetch of the next-token row
             dt = time.perf_counter() - t0
             self.stats.record_decode_step(
                 len(active), self.ecfg.max_slots, dt

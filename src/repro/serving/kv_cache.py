@@ -46,10 +46,10 @@ from repro.models import transformer as T
 __all__ = ["PagedKVCache"]
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _copy_page(buffers, src: jax.Array, dst: jax.Array):
+def _copy_page_impl(buffers, src: jax.Array, dst: jax.Array, *, shardings):
     """Device-side page copy across every layer pool (COW split)."""
-    return jax.tree.map(lambda b: b.at[:, dst].set(b[:, src]), buffers)
+    out = jax.tree.map(lambda b: b.at[:, dst].set(b[:, src]), buffers)
+    return sharding_lib.constrain_pools(out, shardings)
 
 
 class PagedKVCache:
@@ -107,9 +107,22 @@ class PagedKVCache:
         self.buffers = T.init_paged_cache(
             cfg, self.n_pages, page, shardings=self.shardings
         )
+        # COW page copy, jit'd per cache so the sharded-pool layout pin
+        # (constrain_pools, jaxlint JL005) closes over this pool's
+        # shardings; single-device caches close over None (no-op).
+        self._copy_page = jax.jit(
+            functools.partial(_copy_page_impl, shardings=self.shardings),
+            donate_argnums=(0,),
+        )
         self.page_table = np.zeros(
             (max_slots, self.pages_per_seq), np.int32
         )
+        # Device mirror of the page table, uploaded lazily and cached
+        # until a table mutation invalidates it: steady-state decode
+        # (no admissions, no page-boundary crossings) re-dispatches the
+        # same device array instead of paying a (slots, pages) host
+        # upload every step.
+        self._table_dev: jax.Array | None = None
         self._free: list[int] = list(range(self.n_pages - 1, 0, -1))
         self._owned: dict[int, list[int]] = {}
         # slot references per physical page; the trash page is never
@@ -159,6 +172,8 @@ class PagedKVCache:
                 f"position {pos} exceeds slot capacity {self.max_len}"
             )
         owned = self._owned.setdefault(slot, [])
+        if len(owned) < need:
+            self._table_dev = None  # growing (or rolling back) the table
         added: list[int] = []
         while len(owned) < need:
             if not self._free:
@@ -191,6 +206,7 @@ class PagedKVCache:
                 else:
                     self._free.append(p)
         self.page_table[slot, :] = 0
+        self._table_dev = None
 
     # ---- sharing (prefix cache) --------------------------------------
     def incref(self, page: int) -> None:
@@ -226,6 +242,7 @@ class PagedKVCache:
         for i, p in enumerate(pages):
             self.page_table[slot, i] = p
             owned.append(int(p))
+        self._table_dev = None
 
     def release_cached(self, page: int) -> None:
         """Evict a parked page back to the free list (LRU eviction by
@@ -251,7 +268,7 @@ class PagedKVCache:
             raise RuntimeError("KV cache out of pages")
         dst = self._free.pop()
         self._ref[dst] = 1
-        self.buffers = _copy_page(
+        self.buffers = self._copy_page(
             self.buffers,
             jnp.asarray(src, jnp.int32),
             jnp.asarray(dst, jnp.int32),
@@ -264,9 +281,21 @@ class PagedKVCache:
                 self._free.append(src)
         owned[logical] = dst
         self.page_table[slot, logical] = dst
+        self._table_dev = None
         return dst
 
     # ---- views -------------------------------------------------------
+    def device_table(self) -> jax.Array:
+        """The full page table as a device array, cached across steps.
+
+        Any table mutation (alloc/free/adopt/COW) invalidates the cache;
+        between mutations the decode loop re-dispatches the same
+        committed array, so a steady state whose sequences sit inside a
+        page pays zero host→device uploads for the table."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.page_table)
+        return self._table_dev
+
     def table_row(self, slot: int, n_pages: int) -> np.ndarray:
         return self.page_table[slot, :n_pages].copy()
 

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import hot_path
+from repro.distributed import sharding as sharding_lib
 from repro.serving.kv_cache import PagedKVCache
 
 __all__ = ["SwapManager", "SwapRecord", "SwapStats"]
@@ -52,14 +54,14 @@ def _gather_pages(buffers, idx: jax.Array):
     return jax.tree.map(lambda b: b[:, idx], buffers)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _scatter_pages(buffers, idx: jax.Array, data):
+def _scatter_pages_impl(buffers, idx: jax.Array, data, *, shardings):
     """Write staged page data back into pool pages ``idx`` (duplicate
     trash-page padding entries all target page 0, whose contents are
     masked by every read)."""
-    return jax.tree.map(
+    out = jax.tree.map(
         lambda b, d: b.at[:, idx].set(d), buffers, data
     )
+    return sharding_lib.constrain_pools(out, shardings)
 
 
 def _pad_pow2(pages: list[int]) -> np.ndarray:
@@ -125,6 +127,13 @@ class SwapManager:
         self.kv = kv
         self.page_in_tree = page_in_tree
         self.stats = SwapStats()
+        # Restore scatter, jit'd per manager so the sharded-pool layout
+        # pin (constrain_pools, jaxlint JL005) closes over this pool's
+        # shardings; single-device pools close over None (no-op).
+        self._scatter_pages = jax.jit(
+            functools.partial(_scatter_pages_impl, shardings=kv.shardings),
+            donate_argnums=(0,),
+        )
         # bytes one page occupies across every layer pool
         self.page_bytes = sum(
             int(np.prod(b.shape[0:1] + b.shape[2:])) * b.dtype.itemsize
@@ -171,6 +180,7 @@ class SwapManager:
             pending=host is not None,
         )
 
+    @hot_path
     def finalize(self, record: SwapRecord) -> None:
         """Materialize the staged copy on the host and drop the
         device-side staging arrays (freeing their pool-sized device
@@ -178,7 +188,9 @@ class SwapManager:
         step(s) since ``swap_out``; this is at worst a short wait."""
         if not record.pending:
             return
-        record.host = jax.tree.map(np.asarray, record.host)
+        # One batched fetch of the whole staging tree; the DMA has been
+        # in flight since swap_out, so this lands, not blocks.
+        record.host = jax.device_get(record.host)  # jaxlint: disable=JL001 -- the sanctioned explicit sync that lands an async swap-out transfer
         record.pending = False
 
     # ---- in ----------------------------------------------------------
@@ -216,7 +228,7 @@ class SwapManager:
                     continue
                 idx[j] = int(kv.page_table[slot, li])
                 restored += 1
-            kv.buffers = _scatter_pages(
+            kv.buffers = self._scatter_pages(
                 kv.buffers,
                 jnp.asarray(idx),
                 jax.tree.map(jnp.asarray, record.host),

@@ -108,3 +108,70 @@ def test_identical_payloads_clean(tmp_path, monkeypatch, capsys):
     )
     assert rc == 0
     assert "GONE" not in out and "REGRESSION" not in out
+
+
+# ----------------------------------------------------------------------
+# missing / unparsable inputs: informational by default, fatal --strict
+# ----------------------------------------------------------------------
+
+
+def _run_raw(tmp_path, monkeypatch, capsys, *argv):
+    monkeypatch.setattr(sys, "argv", ["bench_diff.py", *argv])
+    rc = bench_diff.main()
+    captured = capsys.readouterr()
+    return rc, captured.out + captured.err
+
+
+def test_missing_current_fails_strict(tmp_path, monkeypatch, capsys):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_payload(mesh=True)))
+    missing = tmp_path / "nope.json"
+    rc, out = _run_raw(
+        tmp_path, monkeypatch, capsys,
+        "--current", str(missing), "--baseline", str(base),
+    )
+    assert rc == 0 and "cannot read" in out  # tier-1 mode stays a report
+    rc, out = _run_raw(
+        tmp_path, monkeypatch, capsys,
+        "--current", str(missing), "--baseline", str(base), "--strict",
+    )
+    assert rc == 1 and "cannot read" in out
+
+
+def test_unparsable_current_fails_strict_without_traceback(
+    tmp_path, monkeypatch, capsys
+):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_payload(mesh=True)))
+    broken = tmp_path / "broken.json"
+    broken.write_text("{ not json")
+    # previously an unhandled json.JSONDecodeError traceback
+    rc, out = _run_raw(
+        tmp_path, monkeypatch, capsys,
+        "--current", str(broken), "--baseline", str(base), "--strict",
+    )
+    assert rc == 1 and "cannot read" in out
+    rc, _ = _run_raw(
+        tmp_path, monkeypatch, capsys,
+        "--current", str(broken), "--baseline", str(base),
+    )
+    assert rc == 0
+
+
+def test_unreadable_explicit_baseline_fails_strict(
+    tmp_path, monkeypatch, capsys
+):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(_payload(mesh=True)))
+    broken = tmp_path / "base.json"
+    broken.write_text("]]")
+    rc, out = _run_raw(
+        tmp_path, monkeypatch, capsys,
+        "--current", str(cur), "--baseline", str(broken), "--strict",
+    )
+    assert rc == 1 and "cannot read baseline" in out
+    rc, _ = _run_raw(
+        tmp_path, monkeypatch, capsys,
+        "--current", str(cur), "--baseline", str(broken),
+    )
+    assert rc == 0

@@ -1,0 +1,149 @@
+"""Runtime dispatch guards: the steady-state decode loop must run under
+DispatchGuard with zero recompiles and zero implicit device->host
+transfers per step — and an injected violation must trip it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import guards
+from repro.analysis.guards import DispatchGuard, HostSyncError, RecompileError
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.serving import Engine, EngineConfig
+
+
+def _smoke_cfg(**kw):
+    return registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=2, vocab_size=128, **kw
+    )
+
+
+# ----------------------------------------------------------------------
+# guard mechanics (no engine)
+# ----------------------------------------------------------------------
+
+
+def test_guard_trips_on_implicit_syncs():
+    x = jnp.arange(4.0)
+    with DispatchGuard(max_compiles=None) as g:
+        host = jax.device_get(x)  # the sanctioned explicit channel
+        assert isinstance(host, np.ndarray)
+        with pytest.raises(HostSyncError):
+            x[0].item()
+        with pytest.raises(HostSyncError):
+            int(x[1])
+        with pytest.raises(HostSyncError):
+            bool(x[0] > 0)
+    assert g.explicit_syncs == 1
+    assert g.implicit_syncs == 3
+    # interception is fully unwound on exit
+    assert x[0].item() == 0.0 and int(x[1]) == 1
+
+
+def test_guard_counts_without_raising_when_asked():
+    x = jnp.ones((2,))
+    with DispatchGuard(max_compiles=None, raise_on_sync=False) as g:
+        x[0].item()
+        float(x[1])
+    assert g.implicit_syncs == 2
+
+
+def test_guard_trips_on_recompile():
+    f = jax.jit(lambda a: a * 3)
+    f(jnp.ones((4,))).block_until_ready()  # warm
+    with pytest.raises(RecompileError):
+        with DispatchGuard(max_compiles=0):
+            # fresh shape -> fresh program -> backend compile
+            f(jnp.ones((5,))).block_until_ready()
+
+
+def test_guard_passes_warm_cache_hits():
+    f = jax.jit(lambda a: a + 1)
+    f(jnp.ones((3,))).block_until_ready()
+    with DispatchGuard(max_compiles=0) as g:
+        y = f(jnp.ones((3,)))
+        jax.device_get(y)
+    assert g.compiles == 0 and g.implicit_syncs == 0
+
+
+def test_hot_path_marker_is_inert():
+    @guards.hot_path
+    def fn(x):
+        return x + 1
+
+    assert guards.is_hot_path(fn)
+    assert fn(1) == 2
+
+
+# ----------------------------------------------------------------------
+# the tier-1 guarantee: steady-state decode is guard-clean
+# ----------------------------------------------------------------------
+
+
+def _warmed_engine(n_reqs=3, max_new=32):
+    cfg = _smoke_cfg()
+    eng = Engine(
+        cfg,
+        make_local_mesh(),
+        engine_cfg=EngineConfig(max_slots=4, max_len=128),
+    )
+    rng = np.random.default_rng(11)
+    for _ in range(n_reqs):
+        prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+        eng.submit(prompt, max_new)
+    # warmup: admission (prefill compile + sync) and the first decode
+    fins = eng.step()
+    assert not fins and len(eng.scheduler.active()) == n_reqs
+    return eng
+
+
+def test_steady_state_decode_is_guard_clean():
+    eng = _warmed_engine()
+    n_steps = 6
+    with DispatchGuard(max_compiles=0) as g:
+        for _ in range(n_steps):
+            fins = eng.step()
+            assert not fins  # steady state: nobody finishes mid-guard
+    assert g.compiles == 0, "decode recompiled after warmup"
+    assert g.implicit_syncs == 0
+    # exactly one batched fetch (the next-token row) per decode step
+    assert g.explicit_syncs == n_steps
+    # the engine is still healthy afterwards: drain to completion
+    fins = eng.drain(max_steps=200)
+    assert len(fins) == 3
+
+
+def test_injected_item_trips_the_guard():
+    eng = _warmed_engine()
+    orig = eng._decode
+
+    def leaky_decode(*args):
+        toks_dev, buffers = orig(*args)
+        toks_dev[0].item()  # the classic per-step scalar pull
+        return toks_dev, buffers
+
+    eng._decode = leaky_decode
+    with pytest.raises(HostSyncError, match="item"):
+        with DispatchGuard(max_compiles=0):
+            eng.step()
+    # (no recovery assertion: the aborted step already donated the KV
+    # buffers — the guard's contract is to fail loudly, not to resume)
+
+
+def test_injected_recompile_trips_the_guard():
+    eng = _warmed_engine()
+    orig = eng._decode
+
+    def recompiling_decode(*args):
+        # a fresh jit wrapper per call: always a cache miss
+        return jax.jit(lambda p, b, t, pos, tab: orig(p, b, t, pos, tab))(
+            *args
+        )
+
+    eng._decode = recompiling_decode
+    with pytest.raises(RecompileError):
+        with DispatchGuard(max_compiles=0):
+            eng.step()
+    eng._decode = orig

@@ -1,0 +1,488 @@
+"""jaxlint rule fixtures (true positive / true negative / suppression
+per rule) plus the self-scan: src/repro must be clean modulo the
+committed baseline, and the baseline must carry no stale entries."""
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import jaxlint
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def codes(src: str, path: str = "x.py") -> list[str]:
+    return [f.code for f in jaxlint.lint_source(src, path)]
+
+
+# ----------------------------------------------------------------------
+# JL001 — implicit host sync in @hot_path functions
+# ----------------------------------------------------------------------
+
+HOT_HEADER = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.analysis.guards import hot_path
+"""
+
+
+def test_jl001_item_true_positive():
+    src = HOT_HEADER + """
+@hot_path
+def step(xs):
+    y = jnp.sum(xs)
+    return y.item()
+"""
+    assert codes(src) == ["JL001"]
+
+
+def test_jl001_int_cast_on_device_value():
+    src = HOT_HEADER + """
+@hot_path
+def step(xs):
+    return int(jnp.argmax(xs))
+"""
+    assert codes(src) == ["JL001"]
+
+
+def test_jl001_branch_on_device_value():
+    src = HOT_HEADER + """
+@hot_path
+def step(xs):
+    y = jnp.any(xs)
+    if y:
+        return 1
+    return 0
+"""
+    assert codes(src) == ["JL001"]
+
+
+def test_jl001_np_asarray_and_mapped_asarray():
+    src = HOT_HEADER + """
+@hot_path
+def step(tree, xs):
+    host = np.asarray(jnp.exp(xs))
+    return jax.tree.map(np.asarray, tree), host
+"""
+    assert codes(src) == ["JL001", "JL001"]
+
+
+def test_jl001_device_get_flagged_but_suppressible():
+    src = HOT_HEADER + """
+@hot_path
+def step(toks_dev):
+    return jax.device_get(toks_dev)
+"""
+    assert codes(src) == ["JL001"]
+    sup = src.replace(
+        "return jax.device_get(toks_dev)",
+        "return jax.device_get(toks_dev)  "
+        "# jaxlint: disable=JL001 -- the one batched per-step fetch",
+    )
+    assert codes(sup) == []
+
+
+def test_jl001_jit_attr_results_are_tainted():
+    # the Engine.step shape: self._decode is assigned from jax.jit in
+    # __init__, so its call results are device values anywhere in the
+    # class
+    src = HOT_HEADER + """
+class Engine:
+    def __init__(self):
+        self._decode = jax.jit(lambda x: x * 2)
+
+    @hot_path
+    def step(self, tokens):
+        toks_dev = self._decode(jnp.asarray(tokens))
+        return int(toks_dev[0])
+"""
+    assert codes(src) == ["JL001"]
+
+
+def test_jl001_true_negatives():
+    src = HOT_HEADER + """
+@hot_path
+def step(xs, reqs):
+    tokens = np.zeros((4,), np.int32)      # host alloc: fine
+    if reqs:                               # host container truthiness
+        tokens[0] = len(reqs)
+    nxt = jax.device_get(jnp.tanh(xs))  # jaxlint: disable=JL001 -- sanctioned
+    return int(nxt[0])                     # int() on numpy: fine
+
+def not_hot(xs):
+    return jnp.sum(xs).item()              # not a hot path: fine
+"""
+    assert codes(src) == []
+
+
+def test_jl000_reasonless_suppression_suppresses_nothing():
+    src = HOT_HEADER + """
+@hot_path
+def step(xs):
+    return jnp.sum(xs).item()  # jaxlint: disable=JL001
+"""
+    got = codes(src)
+    assert "JL000" in got and "JL001" in got
+
+
+# ----------------------------------------------------------------------
+# JL002 — Python control flow over tracers inside jit
+# ----------------------------------------------------------------------
+
+
+def test_jl002_branch_on_tracer():
+    src = """
+import jax
+
+@jax.jit
+def f(x: jax.Array):
+    if x > 0:
+        return x
+    return -x
+"""
+    assert codes(src) == ["JL002"]
+
+
+def test_jl002_iteration_over_tracer():
+    src = """
+import jax
+
+@jax.jit
+def f(x: jax.Array):
+    acc = 0
+    for v in x:
+        acc = acc + v
+    return acc
+"""
+    assert codes(src) == ["JL002"]
+
+
+def test_jl002_true_negatives_and_suppression():
+    src = """
+import jax
+
+@jax.jit
+def f(x: jax.Array, mode=None):
+    if mode is None:              # is-None dispatch: static
+        mode = "std"
+    for i in range(x.shape[0]):   # shape is static under trace
+        x = x + i
+    while x.sum() > 0:  # jaxlint: disable=JL002 -- fixture: honored
+        x = x - 1
+    return x
+"""
+    assert codes(src) == []
+
+
+# ----------------------------------------------------------------------
+# JL003 — recompile hazards
+# ----------------------------------------------------------------------
+
+
+def test_jl003_jit_constructed_per_call():
+    src = """
+import jax
+
+def g(x):
+    f = jax.jit(lambda y: y * 2)
+    return f(x)
+"""
+    assert codes(src) == ["JL003"]
+
+
+def test_jl003_immediately_invoked_jit():
+    src = """
+import jax
+
+def apply(fn, x):
+    return jax.jit(fn)(x)
+"""
+    # constructed-in-function + immediately-invoked: both fire
+    assert codes(src) == ["JL003", "JL003"]
+
+
+def test_jl003_shape_closure_lambda():
+    src = """
+import jax
+
+def make(x):
+    n = x.shape[0]
+    return jax.jit(lambda y: y.reshape(n))
+"""
+    got = codes(src)
+    assert "JL003" in got
+    msgs = [f.message for f in jaxlint.lint_source(src)]
+    assert any("closes over" in m for m in msgs)
+
+
+def test_jl003_container_literal_at_jit_callsite():
+    src = """
+import jax
+
+@jax.jit
+def f(x, cfg):
+    return x
+
+def caller(x):
+    return f(x, {"mode": "fast", "k": 4})
+"""
+    assert codes(src) == ["JL003"]
+
+
+def test_jl003_init_constructed_jits_are_fine():
+    src = """
+import jax
+
+class Engine:
+    def __init__(self):
+        self._decode = jax.jit(lambda x: x)
+
+    def run(self, x):
+        return self._decode(x)
+"""
+    assert codes(src) == []
+
+
+# ----------------------------------------------------------------------
+# JL004 — Pallas structural checks
+# ----------------------------------------------------------------------
+
+PALLAS_HEADER = """
+import functools
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+"""
+
+
+def _pallas_fixture(in_map: str, out_map: str, operands: str,
+                    kernel: str) -> str:
+    return PALLAS_HEADER + f"""
+{kernel}
+
+def build(x, sched):
+    grid = (4, 2)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, 1), {in_map})],
+            out_specs=pl.BlockSpec((1, 1), {out_map}),
+        ),
+        out_shape=None,
+    )({operands})
+"""
+
+
+GOOD_KERNEL = """
+def _kernel(s_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+"""
+
+
+def test_jl004_index_map_arity():
+    # grid rank 2 + 1 scalar-prefetch operand = 3 expected args
+    src = _pallas_fixture(
+        "lambda i, j: (i, j)",          # missing the prefetch ref
+        "lambda i, j, s: (i, j)",
+        "sched, x",
+        GOOD_KERNEL,
+    )
+    found = [f for f in jaxlint.lint_source(src, "kernels/k.py")]
+    assert [f.code for f in found] == ["JL004"]
+    assert "expected 3" in found[0].message
+
+
+def test_jl004_unmasked_validity_ref():
+    bad_kernel = """
+def _kernel(valid_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+"""
+    src = _pallas_fixture(
+        "lambda i, j, s: (i, j)",
+        "lambda i, j, s: (i, j)",
+        "sched, x",
+        bad_kernel,
+    )
+    found = jaxlint.lint_source(src, "kernels/k.py")
+    assert [f.code for f in found] == ["JL004"]
+    assert "valid_ref" in found[0].message
+
+
+def test_jl004_masked_kernel_is_clean():
+    masked_kernel = """
+def _kernel(valid_ref, x_ref, o_ref):
+    @pl.when(valid_ref[0] == 1)
+    def _():
+        o_ref[...] = x_ref[...]
+"""
+    src = _pallas_fixture(
+        "lambda i, j, s: (i, j)",
+        "lambda i, j, s: (i, j)",
+        "sched, x",
+        masked_kernel,
+    )
+    assert [f.code for f in jaxlint.lint_source(src, "kernels/k.py")] == []
+
+
+def test_jl004_operand_count():
+    # 1 prefetch + 1 in_spec = 2 operands; passing 3 means the prefetch
+    # schedule slipped out of first position (or an operand is missing a
+    # spec)
+    src = _pallas_fixture(
+        "lambda i, j, s: (i, j)",
+        "lambda i, j, s: (i, j)",
+        "sched, x, x",
+        GOOD_KERNEL,
+    )
+    found = jaxlint.lint_source(src, "kernels/k.py")
+    assert [f.code for f in found] == ["JL004"]
+    assert "prefetch" in found[0].message
+
+
+def test_jl004_index_maps_are_exempt_from_masking():
+    # index maps receive the same prefetch refs but only compute block
+    # coordinates — the real kernels' q_map/kv_map must not be flagged
+    src = PALLAS_HEADER + """
+def _kernel(pos_ref, x_ref, o_ref):
+    o_ref[...] = jnp.where(pos_ref[0] >= 0, x_ref[...], 0.0)
+
+def build(x, pos):
+    grid = (4,)
+
+    def pos_map(i, pos_ref):
+        return (pos_ref[i],)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1,), pos_map)],
+            out_specs=pl.BlockSpec((1,), pos_map),
+        ),
+        out_shape=None,
+    )(pos, x)
+"""
+    assert [f.code for f in jaxlint.lint_source(src, "kernels/k.py")] == []
+
+
+# ----------------------------------------------------------------------
+# JL005 — unconstrained paged-pool writes
+# ----------------------------------------------------------------------
+
+
+def test_jl005_tree_mapped_pool_write():
+    src = """
+import jax
+
+def scatter(buffers, idx, data):
+    return jax.tree.map(lambda b, d: b.at[:, idx].set(d), buffers, data)
+"""
+    assert codes(src) == ["JL005"]
+
+
+def test_jl005_direct_pool_write():
+    src = """
+def write(cache, phys, off, k):
+    kc = cache["k"].at[phys, off].set(k)
+    return kc
+"""
+    assert codes(src) == ["JL005"]
+
+
+def test_jl005_constrained_write_is_clean():
+    src = """
+import jax
+from repro.distributed.sharding import constrain_pools
+
+def scatter(buffers, idx, data, shardings):
+    out = jax.tree.map(lambda b, d: b.at[:, idx].set(d), buffers, data)
+    return constrain_pools(out, shardings)
+"""
+    assert codes(src) == []
+
+
+def test_jl005_non_pool_writes_are_fine():
+    src = """
+import jax.numpy as jnp
+
+def route(x, gi, se, posc, xs):
+    buf = jnp.zeros((4, 2, 8))
+    buf = buf.at[gi, se, posc].add(xs)   # expert-capacity buffer
+    return buf
+"""
+    assert codes(src) == []
+
+
+def test_jl005_suppression_honored():
+    src = """
+import jax
+
+def scatter(buffers, idx, data):
+    # jaxlint: disable=JL005 -- fixture: single-device tool, no mesh
+    return jax.tree.map(lambda b, d: b.at[:, idx].set(d), buffers, data)
+"""
+    assert codes(src) == []
+
+
+# ----------------------------------------------------------------------
+# fingerprints, baseline, CLI
+# ----------------------------------------------------------------------
+
+
+def test_fingerprint_is_line_number_independent():
+    src = """
+import jax
+
+def g(x):
+    f = jax.jit(lambda y: y * 2)
+    return f(x)
+"""
+    shifted = "\n\n\n" + src
+    fp = jaxlint.lint_source(src)[0].fingerprint
+    fp2 = jaxlint.lint_source(shifted)[0].fingerprint
+    assert fp == fp2
+
+
+def test_baseline_requires_reasons(tmp_path):
+    bad = tmp_path / "b.txt"
+    bad.write_text("some/file.py:JL003:g:f = jax.jit(\n")
+    with pytest.raises(ValueError, match="reason"):
+        jaxlint.load_baseline(bad)
+
+
+def test_cli_reports_and_baselines(tmp_path, monkeypatch, capsys):
+    mod = tmp_path / "m.py"
+    mod.write_text(
+        "import jax\n\ndef g(x):\n    f = jax.jit(lambda y: y)\n"
+        "    return f(x)\n"
+    )
+    monkeypatch.chdir(tmp_path)
+    assert jaxlint.main(["m.py"]) == 1
+    out = capsys.readouterr().out
+    assert "JL003" in out and "hint:" in out
+
+    base = tmp_path / "base.txt"
+    fp = jaxlint.lint_paths(["m.py"])[0].fingerprint
+    base.write_text(f"{fp} # fixture: accepted\n")
+    assert jaxlint.main(["m.py", "--baseline", "base.txt"]) == 0
+
+    # fixing the finding strands the entry -> stale -> non-zero
+    mod.write_text("def g(x):\n    return x\n")
+    assert jaxlint.main(["m.py", "--baseline", "base.txt"]) == 1
+    assert "stale" in capsys.readouterr().err
+
+
+def test_self_scan_src_clean_modulo_baseline(monkeypatch):
+    monkeypatch.chdir(ROOT)
+    findings = jaxlint.lint_paths(["src"])
+    baseline = jaxlint.load_baseline(ROOT / "jaxlint_baseline.txt")
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    assert not fresh, "unbaselined jaxlint findings:\n" + "\n".join(
+        f.render() for f in fresh
+    )
+    stale = set(baseline) - {f.fingerprint for f in findings}
+    assert not stale, f"stale baseline entries: {sorted(stale)}"
