@@ -71,6 +71,16 @@ METRICS = [
     ),
     ("guard compiles/step", ("dispatch_guard", "compiles"), False),
     ("guard implicit D2H", ("dispatch_guard", "implicit_d2h"), False),
+    (
+        "observability traced/off decode",
+        ("observability", "traced_vs_off"),
+        True,
+    ),
+    (
+        "observability traced decode tok/s",
+        ("observability", "traced", "decode_tok_s"),
+        True,
+    ),
     ("mesh tp=1 decode tok/s", ("mesh", "by_tp", "1", "decode_tok_s"), True),
     ("mesh tp=8 decode tok/s", ("mesh", "by_tp", "8", "decode_tok_s"), True),
     ("mesh streams equal", ("mesh", "streams_equal"), True),

@@ -33,8 +33,20 @@ python -m repro.analysis.jaxlint src --baseline jaxlint_baseline.txt
 # instead of rotting until the next full benchmark run. --smoke implies
 # --guards: the dispatch-guard scenario runs *enforced*, so a recompile
 # or implicit device->host sync in steady-state decode fails the gate.
+# --trace-out round-trips the observability scenario's span ring
+# through the Perfetto exporter; the validator then proves the file is
+# openable (monotonic timestamps per track, matched B/E pairs, nonempty
+# slot tracks) so a tracer regression can't ship an unreadable timeline.
 echo "tier1: benchmarks/serve_engine.py --smoke"
-python -m benchmarks.serve_engine --smoke > /dev/null
+trace_out="$(mktemp -t tier1_trace_XXXXXX.json)"
+trap 'rm -f "$trace_out"' EXIT
+python -m benchmarks.serve_engine --smoke --trace-out "$trace_out" > /dev/null
+echo "tier1: perfetto trace round-trip"
+python - "$trace_out" <<'EOF'
+import sys
+from repro.obs.perfetto import validate_trace_file
+print("trace ok:", validate_trace_file(sys.argv[1]))
+EOF
 # Trajectory report (non-fatal): how the tracked BENCH_serve.json
 # numbers moved vs the committed baseline. Pure reporting — benchmark
 # noise must not gate tier 1; scripts/bench_diff.py --strict exists for

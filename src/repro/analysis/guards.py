@@ -192,10 +192,17 @@ class DispatchGuard:
         max_compiles: int | None = 0,
         raise_on_sync: bool = True,
         transfer_guard: bool = True,
+        metrics=None,
     ) -> None:
+        """``metrics``: optional ``repro.obs.MetricsRegistry``.  On exit
+        the guarded region's counts land in ``repro_guard_compiles_total``
+        / ``_implicit_syncs_total`` / ``_explicit_syncs_total``, so
+        guarded benchmark loops show up in the same Prometheus snapshot
+        as the engine's own counters."""
         self.max_compiles = max_compiles
         self.raise_on_sync = raise_on_sync
         self.transfer_guard = transfer_guard
+        self.metrics = metrics
         self.implicit_syncs = 0
         self.explicit_syncs = 0
         self._compiles_at_enter = 0
@@ -311,6 +318,20 @@ class DispatchGuard:
             self._exit_stack = None
         self._compiles_at_exit = compile_events_total()
         self._active = False
+        if self.metrics is not None:
+            self.metrics.counter(
+                "repro_guard_compiles_total",
+                "Backend compiles inside DispatchGuard regions",
+            ).inc(self.compiles)
+            self.metrics.counter(
+                "repro_guard_implicit_syncs_total",
+                "Implicit device->host syncs inside DispatchGuard regions",
+            ).inc(self.implicit_syncs)
+            self.metrics.counter(
+                "repro_guard_explicit_syncs_total",
+                "Sanctioned jax.device_get calls inside DispatchGuard "
+                "regions",
+            ).inc(self.explicit_syncs)
         if exc_type is not None:
             return False
         if self.max_compiles is not None and self.compiles > self.max_compiles:

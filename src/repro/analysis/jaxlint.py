@@ -29,6 +29,12 @@ reviewer had to hand-find:
          ``constrain_pools`` / ``with_sharding_constraint`` in the same
          function.  The PR 7 regression: an unconstrained sharded pool
          write made XLA round-trip the whole KV pool.
+  JL006  observability recorder call (``tracer.begin/end/instant``,
+         ``stats.record_*``, ``metrics...inc/observe/set``) inside a
+         ``jit``-decorated function.  Recorders are host-side Python:
+         under jit they fire once at trace time and never again, so the
+         metric silently under-counts by (steps - compiles) — record
+         around the jit boundary instead.
   JL000  malformed suppression: a ``# jaxlint: disable=...`` comment
          without a non-empty ``-- reason`` string.
 
@@ -84,6 +90,7 @@ RULES = {
     "JL003": "recompile hazard at a jit boundary",
     "JL004": "Pallas kernel structural violation",
     "JL005": "in-jit paged-pool write without a sharding constraint",
+    "JL006": "observability recorder call inside a jit-decorated function",
 }
 
 HINTS = {
@@ -98,8 +105,14 @@ HINTS = {
     "mask trash-page reads by logical position; prefetch operands first",
     "JL005": "route the write through constrain_paged_pool / "
     "sharding.constrain_pools so GSPMD keeps the pool layout in place",
+    "JL006": "recorders run at trace time under jit (once per compile, "
+    "not per call) — move the record to the host-side caller of the "
+    "jit'd function",
 }
 
+_OBS_METHODS = {"begin", "end", "instant", "complete", "observe", "inc",
+                "set"}
+_OBS_BASE_RE = re.compile(r"(^|_)(tracer|metrics|stats|registry)$")
 _POOL_NAMES = {"kc", "vc", "k_pages", "v_pages"}
 _POOL_CONTAINERS = {"cache", "caches", "pool", "pools"}
 _POOL_TREE_ARGS = {"pool", "pools", "buffers", "caches"}
@@ -457,6 +470,7 @@ class _ModuleLinter:
             taint = _Taint(self.jit_attrs, seed=seed)
             taint.run(fn)
             self._check_jit_body(fn, qual, taint)
+            self._check_jl006(fn, qual)
         self._check_jl003_in_function(fn, qual)
 
     def _own_nodes(self, fn: ast.FunctionDef):
@@ -585,6 +599,37 @@ class _ModuleLinter:
                             qual,
                         )
                         break
+
+    # -- JL006 ---------------------------------------------------------
+
+    def _check_jl006(self, fn: ast.FunctionDef, qual: str) -> None:
+        """Recorder calls under jit run at trace time, not per call —
+        the counter/span silently freezes after the first compile.
+        Detection is name-based: a method from the recorder surface
+        (begin/end/instant/complete/observe/inc/set or ``record_*``)
+        invoked on a base whose last component looks like an obs object
+        (``...tracer`` / ``...metrics`` / ``...stats`` /
+        ``...registry``)."""
+        for node in self._own_nodes(fn):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+            ):
+                continue
+            meth = node.func.attr
+            if meth not in _OBS_METHODS and not meth.startswith("record_"):
+                continue
+            base = _full_name(node.func.value)
+            if not base or not _OBS_BASE_RE.search(base.split(".")[-1]):
+                continue
+            self.flag(
+                node,
+                "JL006",
+                f"`{base}.{meth}(...)` inside a jit-decorated function "
+                "records at trace time only — once per compile, never "
+                "per step",
+                qual,
+            )
 
     # -- JL003 ---------------------------------------------------------
 

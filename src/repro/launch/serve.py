@@ -90,6 +90,22 @@ class Server:
         return np.stack(out, axis=1)
 
 
+def _write_obs(served, metrics, args) -> None:
+    """Flush observability artifacts after drain: a Perfetto timeline
+    (``--trace-out``) and/or a Prometheus snapshot (``--metrics-out``).
+    ``served`` is the Engine or ReplicaRouter (both export the same
+    ``export_perfetto(path)`` surface)."""
+    if args.trace_out:
+        n = served.export_perfetto(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out} "
+              "(open at ui.perfetto.dev)")
+    if args.metrics_out:
+        from repro.obs.prom import write_snapshot
+
+        write_snapshot(args.metrics_out, metrics)
+        print(f"wrote Prometheus snapshot to {args.metrics_out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=registry.ARCH_NAMES, required=True)
@@ -167,6 +183,16 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--legacy-server", action="store_true",
                     help="use the fixed-batch reference Server instead")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable span tracing (repro.obs) without "
+                         "writing a file")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event / Perfetto JSON "
+                         "timeline after draining (implies --trace); "
+                         "open it at ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot "
+                         "of the serving metrics after draining")
     args = ap.parse_args()
 
     cfg = (
@@ -237,6 +263,7 @@ def main():
         prefix_cache=args.prefix_cache,
         preemption=not args.no_preemption,
         preempt_min_steps=args.preempt_min_steps,
+        trace=bool(args.trace or args.trace_out),
     )
     schedule = ScheduleParams(
         priority=args.priority,
@@ -268,12 +295,17 @@ def main():
         finished = router.drain()
         dt = time.perf_counter() - t0
         total = sum(len(f.tokens) for f in finished)
-        per = [int(e.stats.finished) for e in router.engines]
+        s = router.stats_summary()
+        per = [int(rep["finished"]) for rep in s["per_replica"]]
         print(
             f"served {len(finished)} requests / {total} tokens in "
-            f"{dt:.2f}s ({total / dt:.1f} tok/s end-to-end; "
+            f"{dt:.2f}s ({total / dt:.1f} tok/s end-to-end, "
+            f"{s['decode_tok_s']:.1f} tok/s decode fleet-wide, "
+            f"p50 {s['p50_token_latency_ms']:.1f}ms "
+            f"p95 {s['p95_token_latency_ms']:.1f}ms; "
             f"per-replica finished: {per})"
         )
+        _write_obs(router, router.merged_metrics(), args)
         grid = np.stack(
             [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
         )
@@ -330,6 +362,7 @@ def main():
             f"{pc['inserted_pages']} indexed, {pc['evicted_pages']} "
             f"evicted, {pc['cow_copies']} COW)"
         )
+    _write_obs(engine, engine.metrics, args)
     grid = np.stack(
         [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
     )

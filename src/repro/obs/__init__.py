@@ -1,0 +1,39 @@
+"""Observability for the serving stack: tracing spans + typed metrics.
+
+Three pieces, deliberately dependency-free (numpy only):
+
+  * :mod:`repro.obs.trace` — ring-buffered, ``perf_counter_ns``-stamped
+    span tracer (``Tracer`` / ``NULL_TRACER``); the engine records
+    per-request lifecycle spans and per-step phase spans through it.
+  * :mod:`repro.obs.metrics` — ``MetricsRegistry`` of counters, gauges
+    and raw-sample histograms; ``ServeStats`` / ``SwapStats`` /
+    ``PrefixStats`` are views over one engine-owned registry.
+  * Exporters: :mod:`repro.obs.perfetto` (Chrome trace-event JSON for
+    ui.perfetto.dev) and :mod:`repro.obs.prom` (Prometheus text
+    exposition).
+
+Everything here is host-side.  Calling a recorder from inside a jit'd
+function records a tracer-time constant, not a runtime value — jaxlint
+rule JL006 flags that statically.
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .perfetto import (
+    export_perfetto,
+    validate_trace,
+    validate_trace_file,
+)
+from .trace import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "export_perfetto",
+    "validate_trace",
+    "validate_trace_file",
+]

@@ -39,8 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.guards import hot_path
+from repro.analysis.guards import compile_events_total, hot_path
 from repro.configs.base import ModelConfig
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.distributed import sharding
 from repro.models import transformer as T
 from repro.serving import sampling as sampling_lib
@@ -83,7 +84,12 @@ class EngineConfig:
     ``repro.serving.swap``) instead of waiting for it to finish;
     ``preempt_min_steps`` is the hysteresis — a sequence may only be
     victimized after running that many steps since its last
-    admit/resume, so a burst preempts once, not every step."""
+    admit/resume, so a burst preempts once, not every step.
+
+    ``trace`` turns on span tracing (``repro.obs``): True for the
+    default ring capacity, an int for an explicit event capacity. Off
+    (the default), the engine binds the no-op tracer and does zero
+    tracing work."""
 
     def __init__(
         self,
@@ -98,6 +104,7 @@ class EngineConfig:
         prefix_cache: bool = False,
         preemption: bool = True,
         preempt_min_steps: int = 4,
+        trace: bool | int = False,
     ):
         self.max_slots = max_slots
         self.max_len = max_len
@@ -112,6 +119,9 @@ class EngineConfig:
         self.max_skips = max_skips
         self.prefix_cache = prefix_cache
         self.preemption = preemption
+        if trace is not True and trace is not False and int(trace) < 0:
+            raise ValueError("trace must be a bool or a capacity >= 0")
+        self.trace = trace
         if preempt_min_steps < 1:
             raise ValueError("preempt_min_steps must be >= 1")
         self.preempt_min_steps = preempt_min_steps
@@ -143,6 +153,7 @@ class EngineConfig:
             prefix_cache=self.prefix_cache,
             preemption=self.preemption,
             preempt_min_steps=self.preempt_min_steps,
+            trace=self.trace,
         )
 
 
@@ -361,12 +372,32 @@ class Engine:
                 self._decode_sampler(),
                 self._presence,
             )
-        self.scheduler = Scheduler(ecfg.max_slots)
-        self.stats = ServeStats()
+        # Observability: one shared metrics registry (ServeStats /
+        # SwapStats / PrefixStats are views over it; `repro.obs.prom`
+        # renders it) and a span tracer. With trace off the engine
+        # binds the no-op tracer — call sites below stay branch-free
+        # and cost one no-op call each.
+        self.metrics = MetricsRegistry()
+        if ecfg.trace:
+            self.tracer = Tracer(
+                capacity=(1 << 16) if ecfg.trace is True else int(ecfg.trace)
+            )
+        else:
+            self.tracer = NULL_TRACER
+        self._intern_trace_ids()
+        self.scheduler = Scheduler(
+            ecfg.max_slots,
+            on_event=self._sched_event if self.tracer.enabled else None,
+        )
+        self.stats = ServeStats(self.metrics)
         # radix-tree prefix cache: parked pages reuse free pool space
         # opportunistically and are evicted (LRU) the moment the
         # allocator wants them back — admission is never blocked
-        self._prefix = PrefixCache(self.kv) if ecfg.prefix_cache else None
+        self._prefix = (
+            PrefixCache(self.kv, metrics=self.metrics)
+            if ecfg.prefix_cache
+            else None
+        )
         # host-memory page swap for preemption (always constructed: the
         # machinery is inert until a preemption actually fires)
         self.swap = SwapManager(
@@ -374,6 +405,7 @@ class Engine:
             page_in_tree=(
                 self._prefix.page_in_tree if self._prefix else None
             ),
+            metrics=self.metrics,
         )
         # uid -> (SequenceState, SwapRecord) for swapped-out sequences;
         # their Requests sit back in the scheduler's waiting queue and
@@ -404,6 +436,44 @@ class Engine:
         self._fancy_slots: set[int] = set()
         self._uid = 0
         self._step_idx = 0
+
+    # ---- observability -----------------------------------------------
+    def _intern_trace_ids(self) -> None:
+        """Resolve every track/name id the engine will ever record —
+        hot-path tracer calls then do no string work at all. (The
+        NULL tracer returns 0 for everything; the ids are never used.)"""
+        tr = self.tracer
+        self._tk_admission = tr.track("engine:admission")
+        self._tk_prefill = tr.track("engine:prefill")
+        self._tk_decode = tr.track("engine:decode")
+        self._tk_sync = tr.track("engine:host_sync")
+        self._tk_queue = tr.track("queue")
+        self._tk_slot = [
+            tr.track(f"slot{i}") for i in range(self.ecfg.max_slots)
+        ]
+        self._nm_admission = tr.name("admission")
+        self._nm_prefill = tr.name("prefill")
+        self._nm_decode_step = tr.name("decode_step")
+        self._nm_host_sync = tr.name("host_sync")
+        self._nm_queued = tr.name("queued")
+        self._nm_decode = tr.name("decode")
+        self._nm_finished = tr.name("finished")
+        self._nm_rejected = tr.name("rejected")
+        self._nm_swap_out = tr.name("swap_out")
+        self._nm_swap_in = tr.name("swap_in")
+        self._nm_preempt = tr.name("preempt")
+        self._nm_cow = tr.name("cow_split")
+        self._nm_prefix_match = tr.name("prefix_match")
+        # scheduler queue-lifecycle instants (see _sched_event)
+        self._sched_names = {
+            kind: tr.name(kind)
+            for kind in ("submit", "admit", "resume", "remove")
+        }
+
+    def _sched_event(self, kind: str, req: Request) -> None:
+        """Scheduler hook -> queue-track instants (only bound when
+        tracing is on, so the off path pays nothing)."""
+        self.tracer.instant(self._tk_queue, self._sched_names[kind], req.uid)
 
     # ---- request intake ----------------------------------------------
     def submit(
@@ -468,6 +538,7 @@ class Engine:
         self.stats.record_reject(
             reason, had_deadline=req.schedule.deadline_s is not None
         )
+        self.tracer.instant(self._tk_queue, self._nm_rejected, req.uid)
         return FinishedRequest(
             uid=req.uid,
             prompt=req.prompt,
@@ -610,6 +681,7 @@ class Engine:
                 self._cow_reserve[slot] -= 1
                 self._page_need[slot] -= 1
             self.stats.record_cow()
+            self.tracer.instant(self._tk_slot[slot], self._nm_cow, p)
 
     def _reserved_pages(self) -> int:
         """Pages promised to active sequences for decode growth but not
@@ -801,8 +873,16 @@ class Engine:
         """Swap one running sequence out to host memory and re-queue its
         request for a later bit-exact resume."""
         slot = state.slot
+        uid = state.request.uid
+        # close the slot's decode span before its pages move; a1=1 marks
+        # the close as a preemption, not a finish
+        self.tracer.end(self._tk_slot[slot], self._nm_decode, uid, 1)
+        self.tracer.instant(self._tk_slot[slot], self._nm_preempt, uid)
         record = self.swap.swap_out(
             slot, max_pin=(state.plen - 1) // self.kv.page
+        )
+        self.tracer.instant(
+            self._tk_slot[slot], self._nm_swap_out, uid, record.n_host
         )
         self.scheduler.evict(slot)
         self._page_need.pop(slot, None)
@@ -824,6 +904,10 @@ class Engine:
         state, record = self._swapped.pop(req.uid)
         assert self.scheduler.resume(state, request=req) is not None
         slot = state.slot
+        self.tracer.instant(
+            self._tk_slot[slot], self._nm_swap_in, req.uid, record.n_host
+        )
+        self.tracer.begin(self._tk_slot[slot], self._nm_decode, req.uid)
         reserve = 1 if pages else 0
         self._page_need[slot] = self._lifetime_pages(req) + reserve
         self._cow_reserve[slot] = reserve
@@ -889,12 +973,32 @@ class Engine:
         full_tokens = np.zeros((nb, npre * self.kv.page + s), np.int32)
         full_plens = np.empty((nb,), np.int32)
         states: list[SequenceState] = []
+        t_admit = time.perf_counter()
         for i, (req, pages) in enumerate(plans):
             state = self.scheduler.admit(self._step_idx, request=req)
             assert state is not None
             state.resume_step = self._step_idx
             hit = len(pages) * self.kv.page
             state.prefix_hit_tokens = hit
+            # queue wait: submit -> this admission pass. The tracer gets
+            # it as an X span on the queue track (start = submit time,
+            # same perf_counter clock the ns stamps use).
+            wait = t_admit - req.submit_s
+            self.stats.record_queue_wait(wait)
+            self.tracer.complete(
+                self._tk_queue,
+                self._nm_queued,
+                int(req.submit_s * 1e9),
+                int(wait * 1e9),
+                req.uid,
+            )
+            if pages:
+                self.tracer.instant(
+                    self._tk_slot[state.slot],
+                    self._nm_prefix_match,
+                    req.uid,
+                    len(pages),
+                )
             # a prefix hit carries one extra budgeted page: the COW
             # reserve for a future split of an adopted shared page
             reserve = 1 if pages else 0
@@ -919,6 +1023,9 @@ class Engine:
             self.stats.record_prefix_lookup(hit, state.plen, len(pages))
             states.append(state)
         t0 = time.perf_counter()
+        t0_ns = self.tracer.begin(
+            self._tk_prefill, self._nm_prefill, s, nb
+        )
         with self.mesh:
             # first token picked inside the jit either way: one host
             # sync of N ints. A group of plain (greedy, no-penalty)
@@ -978,6 +1085,8 @@ class Engine:
             # admission-time sync: one batched fetch per prefill group
             toks = jax.device_get(toks_dev)
         dt = time.perf_counter() - t0
+        self.tracer.end(self._tk_prefill, self._nm_prefill, s, nb)
+        self.stats.record_host_sync()
         now = time.perf_counter()
         self.stats.record_prefill(
             int(plens.sum()),
@@ -986,11 +1095,23 @@ class Engine:
             batch=len(states),
             bucket=(nb, s),
         )
+        dur_ns = int(dt * 1e9)
         for i, state in enumerate(states):
             state.generated.append(int(toks[i]))
             state.pos = state.plen
             state.first_token_s = now
             self.stats.record_ttft(now - state.request.submit_s)
+            # per-slot lifecycle: the prefill interval, then the decode
+            # span that stays open until finish (or preemption)
+            self.tracer.complete(
+                self._tk_slot[state.slot], self._nm_prefill, t0_ns,
+                dur_ns, s, nb,
+            )
+            self.tracer.begin(
+                self._tk_slot[state.slot],
+                self._nm_decode,
+                state.request.uid,
+            )
             if self._prefix is not None:
                 # index the prompt's full pages (hits refresh their LRU
                 # tick; new full pages — suffix included — become
@@ -1014,12 +1135,19 @@ class Engine:
         finished: list[FinishedRequest] = list(self._rejected)
         self._rejected.clear()
         self._expire_waiting(finished)
+        # compile correlation: each phase span carries the backend
+        # compiles observed while it ran (a1 of its E event) — 0 after
+        # warmup, the DispatchGuard invariant made continuously visible
+        c0 = compile_events_total()
+        tr = self.tracer
+        tr.begin(self._tk_admission, self._nm_admission)
         plan = self._plan_admission()
         if self._maybe_preempt(plan):
             # the resource picture changed: recompute the whole pass so
             # the blocked high-priority request plans first
             self._unplan(plan)
             plan = self._plan_admission()
+        n_admitted = len(plan.resumes)
         for req, pages in plan.resumes:
             self._resume(req, pages)
         cap = self.ecfg.max_prefill_batch
@@ -1028,9 +1156,12 @@ class Engine:
             while i < len(plans):
                 n = 1 << (min(len(plans) - i, cap).bit_length() - 1)
                 for state in self._admit_group(plans[i : i + n], s, npre):
+                    n_admitted += 1
                     if state.done:  # max_new_tokens == 1 or instant EOS
                         finished.append(self._finish(state))
                 i += n
+        c1 = compile_events_total()
+        tr.end(self._tk_admission, self._nm_admission, n_admitted, c1 - c0)
 
         # a prompt that already fills its slot cannot take a decode step
         for st_ in list(self.scheduler.active()):
@@ -1047,6 +1178,7 @@ class Engine:
                 tokens[st_.slot] = st_.generated[-1]
                 positions[st_.slot] = st_.pos
             t0 = time.perf_counter()
+            tr.begin(self._tk_decode, self._nm_decode_step, len(active))
             with self.mesh:
                 # token picked inside the jit'd step either way: the one
                 # host sync fetches (slots,) ids. All-plain traffic takes
@@ -1076,8 +1208,17 @@ class Engine:
                 # batched (slots,) fetch of every active slot's next
                 # token. Everything downstream (EOS checks, finish
                 # bookkeeping) reads this numpy row, never the device.
+                tr.begin(self._tk_sync, self._nm_host_sync)
                 nxt = jax.device_get(toks_dev)  # jaxlint: disable=JL001 -- the one batched per-step fetch of the next-token row
+                tr.end(self._tk_sync, self._nm_host_sync, len(active))
             dt = time.perf_counter() - t0
+            tr.end(
+                self._tk_decode,
+                self._nm_decode_step,
+                len(active),
+                compile_events_total() - c1,
+            )
+            self.stats.record_host_sync()
             self.stats.record_decode_step(
                 len(active), self.ecfg.max_slots, dt
             )
@@ -1093,6 +1234,7 @@ class Engine:
         for record in self._pending_swaps:
             self.swap.finalize(record)
         self._pending_swaps.clear()
+        self.stats.record_step_compiles(compile_events_total() - c0)
         self._step_idx += 1
         return finished
 
@@ -1107,6 +1249,16 @@ class Engine:
         need = self._page_need.pop(state.slot, 0)
         self._cow_reserve.pop(state.slot, None)
         reclaimed = max(0, need - self.kv.pages_owned(state.slot))
+        # close the slot's decode span (opened at admission/resume)
+        self.tracer.end(
+            self._tk_slot[state.slot],
+            self._nm_decode,
+            state.request.uid,
+            len(state.generated),
+        )
+        self.tracer.instant(
+            self._tk_slot[state.slot], self._nm_finished, state.request.uid
+        )
         if self._prefix is not None:
             # index the decode-written pages too (full blocks only): the
             # next turn of a multi-turn conversation prompts with this
@@ -1188,11 +1340,21 @@ class Engine:
 
     def reset_stats(self) -> None:
         """Zero the per-run counters (benchmark repeats); the radix
-        tree's contents survive — only the numbers reset."""
-        self.stats = ServeStats()
-        self.swap.stats = SwapStats()
+        tree's contents survive — only the numbers reset.
+
+        The metrics registry and the tracer ring reset *atomically*
+        (both or neither): a fresh registry is built and every stats
+        view rebinds to it, and the tracer closes any open spans (they
+        are counted as truncated, and their pending ``end()`` calls
+        become no-ops) before clearing its ring — a mid-traffic reset
+        never leaks a dangling span into the next export."""
+        reg = MetricsRegistry()
+        self.stats = ServeStats(reg)
+        self.swap.stats = SwapStats(reg)
         if self._prefix is not None:
-            self._prefix.stats = PrefixStats()
+            self._prefix.stats = PrefixStats(reg)
+        self.metrics = reg
+        self.tracer.reset()
 
     def stats_summary(self) -> dict:
         out = self.stats.summary()
@@ -1201,4 +1363,11 @@ class Engine:
             out["prefix_cache"].update(self._prefix.stats.snapshot())
             out["prefix_cache"]["enabled"] = True
             out["prefix_cache"]["cached_pages"] = self.kv.cached_pages
+            # keep the prom gauge in step with the pool
+            self._prefix.stats.set_cached_pages(self.kv.cached_pages)
         return out
+
+    def export_perfetto(self, path: str) -> int:
+        """Write this engine's trace ring as Chrome trace-event JSON
+        (requires ``EngineConfig(trace=...)``)."""
+        return self.tracer.export_perfetto(path)

@@ -31,9 +31,13 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
+from repro.obs import MetricsRegistry, export_perfetto
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.prefix import PrefixStats
 from repro.serving.request import FinishedRequest, ScheduleParams
 from repro.serving.sampling import SamplingParams
+from repro.serving.stats import ServeStats
+from repro.serving.swap import SwapStats
 
 __all__ = ["ReplicaRouter"]
 
@@ -138,3 +142,44 @@ class ReplicaRouter:
                     f"drain did not converge in {max_steps} steps"
                 )
         return out
+
+    # ---- observability ------------------------------------------------
+    def merged_metrics(self) -> MetricsRegistry:
+        """One registry over every replica: counters and gauges sum,
+        histogram samples concatenate — merged percentiles are true
+        fleet percentiles, not averages of averages."""
+        for eng in self.engines:
+            if eng._prefix is not None:
+                eng._prefix.stats.set_cached_pages(eng.kv.cached_pages)
+        return MetricsRegistry.merged([eng.metrics for eng in self.engines])
+
+    def stats_summary(self) -> dict:
+        """Fleet-level ``Engine.stats_summary()``: the same schema
+        computed over the merged registry, plus a ``per_replica``
+        breakdown (each replica's own full summary)."""
+        merged = self.merged_metrics()
+        # stats views bind to the merged registry's existing metrics
+        # (get-or-create), so this is the engine summary over fleet data
+        out = ServeStats(merged).summary()
+        out["preemption"].update(SwapStats(merged).snapshot())
+        if any(eng._prefix is not None for eng in self.engines):
+            out["prefix_cache"].update(PrefixStats(merged).snapshot())
+            out["prefix_cache"]["enabled"] = True
+            out["prefix_cache"]["cached_pages"] = sum(
+                eng.kv.cached_pages
+                for eng in self.engines
+                if eng._prefix is not None
+            )
+        out["per_replica"] = [eng.stats_summary() for eng in self.engines]
+        return out
+
+    def reset_stats(self) -> None:
+        for eng in self.engines:
+            eng.reset_stats()
+
+    def export_perfetto(self, path: str) -> int:
+        """One Chrome trace file over every replica: replica r's tracks
+        appear under process ``pid=r``."""
+        return export_perfetto(
+            {r: eng.tracer for r, eng in enumerate(self.engines)}, path
+        )

@@ -38,10 +38,15 @@ def _order_key(req: Request) -> tuple:
 
 
 class Scheduler:
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int, *, on_event=None):
+        """``on_event(kind, request)``: optional queue-lifecycle hook
+        (kinds: "submit", "admit", "resume", "remove") — the engine
+        binds it to its tracer so queue churn shows up as timeline
+        instants. None (the default) costs nothing."""
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         self.max_slots = max_slots
+        self._on_event = on_event
         # kept sorted by _order_key (bisect.insort on submit): index 0 is
         # the highest-priority / most-urgent waiting request
         self.waiting: list[Request] = []
@@ -53,6 +58,8 @@ class Scheduler:
     # ---- queue -------------------------------------------------------
     def submit(self, req: Request) -> None:
         bisect.insort(self.waiting, req, key=_order_key)
+        if self._on_event is not None:
+            self._on_event("submit", req)
 
     def peek_admissible(self, k: int) -> list[Request]:
         """Bounded-lookahead admission window: the first ``min(k,
@@ -82,6 +89,8 @@ class Scheduler:
         rejection) without binding it to a slot."""
         self._pop_waiting(request)
         self._skips.pop(request.uid, None)
+        if self._on_event is not None:
+            self._on_event("remove", request)
 
     def _pop_waiting(self, request: Request) -> Request:
         # remove by identity: dataclass equality would compare numpy
@@ -123,6 +132,8 @@ class Scheduler:
         self._skips.pop(req.uid, None)
         state = SequenceState(request=req, slot=slot, admit_step=step)
         self.slots[slot] = state
+        if self._on_event is not None:
+            self._on_event("admit", req)
         return state
 
     def resume(
@@ -139,6 +150,8 @@ class Scheduler:
         self._skips.pop(request.uid, None)
         state.slot = slot
         self.slots[slot] = state
+        if self._on_event is not None:
+            self._on_event("resume", request)
         return state
 
     def evict(self, slot: int) -> SequenceState:

@@ -1,58 +1,259 @@
 """Latency / throughput / occupancy tracking for the serving engine.
 
-Everything is recorded host-side per engine step; ``summary()`` folds the
-raw samples into the numbers the benchmark emits (tok/s, p50/p95 per-token
-latency, batch occupancy).
+Everything is recorded host-side per engine step into a typed
+:class:`repro.obs.MetricsRegistry` — ``ServeStats`` is a *view* over
+the registry, not a bag of ad-hoc ints.  The same registry therefore
+feeds two consumers that must never disagree:
+
+  * ``summary()`` — the benchmark-facing dict.  Its schema and values
+    are identical to the pre-registry implementation (integer counters
+    stay ints, percentiles are computed from the raw histogram samples
+    with ``np.percentile``), so BENCH trajectories don't move.
+  * ``repro.obs.prom.render`` — the Prometheus text exposition of the
+    same counters/gauges/histograms.
+
+Passing an existing registry binds to its metrics (get-or-create), so
+``ReplicaRouter`` builds a merged summary by constructing a ``ServeStats``
+view over ``MetricsRegistry.merged(per_replica_registries)``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
+
 __all__ = ["ServeStats"]
 
 
 class ServeStats:
-    def __init__(self):
-        self.prefill_tokens = 0
-        self.prefill_time = 0.0
-        self.prefills = 0
-        self.prefill_requests = 0
-        # (N_bucket, S_bucket) -> [calls, requests]: how well batched
-        # admission packs each compiled prefill program
-        self.prefill_buckets: dict[tuple[int, int], list[int]] = {}
-        self.decode_time = 0.0
-        self.decode_steps = 0
-        self.generated = 0
-        self._step_latency: list[float] = []   # s per decode step
-        self._step_active: list[int] = []      # active slots per step
-        self._occupancy: list[float] = []
-        self.finished = 0
+    def __init__(self, registry: MetricsRegistry | None = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        self.registry = reg
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        self._prefills = c(
+            "repro_serve_prefill_calls_total", "jit'd prefill calls"
+        )
+        self._prefill_requests = c(
+            "repro_serve_prefill_requests_total",
+            "requests admitted via prefill",
+        )
+        self._prefill_tokens = c(
+            "repro_serve_prefill_tokens_total", "prompt tokens prefilled"
+        )
+        self._prefill_time = c(
+            "repro_serve_prefill_seconds_total", "wall seconds in prefill"
+        )
+        # (N_bucket, S_bucket) label -> how well batched admission packs
+        # each compiled prefill program
+        self._bucket_calls = c(
+            "repro_serve_prefill_bucket_calls_total",
+            "prefill calls per compiled (N, S) bucket",
+            labelname="bucket",
+        )
+        self._bucket_requests = c(
+            "repro_serve_prefill_bucket_requests_total",
+            "requests admitted per compiled (N, S) bucket",
+            labelname="bucket",
+        )
+        self._decode_time = c(
+            "repro_serve_decode_seconds_total", "wall seconds in decode"
+        )
+        self._decode_steps = c(
+            "repro_serve_decode_steps_total", "decode steps"
+        )
+        self._decode_tokens = c(
+            "repro_serve_decode_tokens_total",
+            "tokens emitted by decode steps (excludes prefill-emitted)",
+        )
+        self._generated = c(
+            "repro_serve_generated_tokens_total", "all emitted tokens"
+        )
+        self._step_latency = h(
+            "repro_serve_step_latency_seconds", "decode step wall time"
+        )
+        self._occupancy = h(
+            "repro_serve_occupancy_ratio",
+            "active slots / max slots per decode step",
+            buckets=tuple(2.0 ** -k for k in range(6, 0, -1)) + (1.0,),
+        )
+        self._finished = c(
+            "repro_serve_requests_finished_total", "requests finished"
+        )
         # sampler kind (SamplingParams.kind, e.g. "greedy",
-        # "temperature+top_k") -> [finished requests, emitted tokens]
-        self.by_sampler: dict[str, list[int]] = {}
+        # "temperature+top_k") -> finished requests / emitted tokens
+        self._finished_by_sampler = c(
+            "repro_serve_finished_by_sampler_total",
+            "finished requests per sampler kind",
+            labelname="sampler",
+        )
+        self._tokens_by_sampler = c(
+            "repro_serve_tokens_by_sampler_total",
+            "emitted tokens per sampler kind",
+            labelname="sampler",
+        )
         # lifetime-budgeted pages handed back unused because a sequence
         # finished (EOS) before its reservation ran out
-        self.pages_reclaimed_early = 0
+        self._pages_reclaimed = c(
+            "repro_serve_pages_reclaimed_early_total",
+            "reservation pages returned early at finish",
+        )
         # prefix cache: prompt tokens served from cached pages vs
         # submitted, shared-page hits, and copy-on-write page splits
-        self.prefix_hit_tokens = 0
-        self.prefix_prompt_tokens = 0
-        self.prefix_hit_pages = 0
-        self.prefix_lookups = 0
-        self.cow_copies = 0
+        self._prefix_lookups = c(
+            "repro_serve_prefix_lookups_total", "radix-tree lookups"
+        )
+        self._prefix_hit_tokens = c(
+            "repro_serve_prefix_hit_tokens_total",
+            "prompt tokens served from cached pages",
+        )
+        self._prefix_prompt_tokens = c(
+            "repro_serve_prefix_prompt_tokens_total",
+            "prompt tokens submitted through prefix lookup",
+        )
+        self._prefix_hit_pages = c(
+            "repro_serve_prefix_hit_pages_total", "shared pages adopted"
+        )
+        self._cow_copies = c(
+            "repro_serve_cow_copies_total", "copy-on-write page splits"
+        )
         # decode-written pages indexed into the radix tree at finish
         # (multi-turn reuse: turn 2's prompt hits turn 1's answer)
-        self.decode_indexed_pages = 0
+        self._decode_indexed = c(
+            "repro_serve_decode_indexed_pages_total",
+            "decode-written pages indexed at finish",
+        )
         # scheduling: preemptions (swap-outs), resumes (swap-ins),
         # structured rejections by reason, SLO attainment for
         # deadline'd requests, and wall-clock TTFT samples
-        self.preemptions = 0
-        self.resumes = 0
-        self.rejected: dict[str, int] = {}
-        self.slo_total = 0
-        self.slo_met = 0
-        self._ttft: list[float] = []           # s, submit -> first token
+        self._preemptions = c(
+            "repro_serve_preemptions_total", "sequences swapped out"
+        )
+        self._resumes = c(
+            "repro_serve_resumes_total", "sequences swapped back in"
+        )
+        self._rejected = c(
+            "repro_serve_rejected_total",
+            "structured rejections",
+            labelname="reason",
+        )
+        self._slo_total = c(
+            "repro_serve_slo_requests_total", "requests with a deadline"
+        )
+        self._slo_met = c(
+            "repro_serve_slo_met_total", "deadline'd requests that met it"
+        )
+        self._ttft = h(
+            "repro_serve_ttft_seconds", "submit -> first-token wall time"
+        )
+        self._queue_wait = h(
+            "repro_serve_queue_wait_seconds", "submit -> admission wall time"
+        )
+        # DispatchGuard correlation: compiles observed during engine
+        # steps after warmup, and sanctioned explicit host syncs
+        self._step_compiles = c(
+            "repro_serve_step_compiles_total",
+            "backend compiles observed during engine steps",
+        )
+        self._host_syncs = c(
+            "repro_serve_host_syncs_total",
+            "sanctioned explicit device->host syncs",
+        )
+
+    # ---- attribute views (external readers + tests) -------------------
+    @property
+    def prefills(self) -> int:
+        return self._prefills.value
+
+    @property
+    def prefill_requests(self) -> int:
+        return self._prefill_requests.value
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._prefill_tokens.value
+
+    @property
+    def prefill_time(self) -> float:
+        return self._prefill_time.value
+
+    @property
+    def prefill_buckets(self) -> dict[tuple[int, int], list[int]]:
+        return {
+            key: [calls, self._bucket_requests.get(key)]
+            for key, calls in self._bucket_calls.items()
+        }
+
+    @property
+    def decode_time(self) -> float:
+        return self._decode_time.value
+
+    @property
+    def decode_steps(self) -> int:
+        return self._decode_steps.value
+
+    @property
+    def generated(self) -> int:
+        return self._generated.value
+
+    @property
+    def finished(self) -> int:
+        return self._finished.value
+
+    @property
+    def by_sampler(self) -> dict[str, list[int]]:
+        return {
+            kind: [n, self._tokens_by_sampler.get(kind)]
+            for kind, n in self._finished_by_sampler.items()
+        }
+
+    @property
+    def pages_reclaimed_early(self) -> int:
+        return self._pages_reclaimed.value
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return self._prefix_hit_tokens.value
+
+    @property
+    def prefix_prompt_tokens(self) -> int:
+        return self._prefix_prompt_tokens.value
+
+    @property
+    def prefix_hit_pages(self) -> int:
+        return self._prefix_hit_pages.value
+
+    @property
+    def prefix_lookups(self) -> int:
+        return self._prefix_lookups.value
+
+    @property
+    def cow_copies(self) -> int:
+        return self._cow_copies.value
+
+    @property
+    def decode_indexed_pages(self) -> int:
+        return self._decode_indexed.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._preemptions.value
+
+    @property
+    def resumes(self) -> int:
+        return self._resumes.value
+
+    @property
+    def rejected(self) -> dict[str, int]:
+        return dict(self._rejected.items())
+
+    @property
+    def slo_total(self) -> int:
+        return self._slo_total.value
+
+    @property
+    def slo_met(self) -> int:
+        return self._slo_met.value
 
     # ---- recording ---------------------------------------------------
     def record_prefill(
@@ -69,26 +270,25 @@ class ServeStats:
         request's last-prompt-token logits is its first output);
         ``bucket``: the compiled (N, S) program shape the call ran under.
         """
-        self.prefills += 1
-        self.prefill_requests += batch
-        self.prefill_tokens += n_tokens
-        self.prefill_time += dt
-        self.generated += emitted
+        self._prefills.inc()
+        self._prefill_requests.inc(batch)
+        self._prefill_tokens.inc(n_tokens)
+        self._prefill_time.inc(dt)
+        self._generated.inc(emitted)
         if bucket is not None:
-            row = self.prefill_buckets.setdefault(tuple(bucket), [0, 0])
-            row[0] += 1
-            row[1] += batch
+            self._bucket_calls.inc(1, label=tuple(bucket))
+            self._bucket_requests.inc(batch, label=tuple(bucket))
 
     def record_decode_step(
         self, n_active: int, max_slots: int, dt: float
     ) -> None:
         """A decode step emits one token per active slot."""
-        self.decode_steps += 1
-        self.decode_time += dt
-        self.generated += n_active
-        self._step_latency.append(dt)
-        self._step_active.append(n_active)
-        self._occupancy.append(n_active / max_slots)
+        self._decode_steps.inc()
+        self._decode_time.inc(dt)
+        self._generated.inc(n_active)
+        self._decode_tokens.inc(n_active)
+        self._step_latency.observe(dt)
+        self._occupancy.observe(n_active / max_slots)
 
     def record_finish(
         self,
@@ -98,39 +298,52 @@ class ServeStats:
         tokens: int = 0,
         slo_met: bool | None = None,
     ) -> None:
-        self.finished += n
+        self._finished.inc(n)
         if kind is not None:
-            row = self.by_sampler.setdefault(kind, [0, 0])
-            row[0] += n
-            row[1] += tokens
+            self._finished_by_sampler.inc(n, label=kind)
+            self._tokens_by_sampler.inc(tokens, label=kind)
         if slo_met is not None:  # the request carried a deadline
-            self.slo_total += 1
-            self.slo_met += bool(slo_met)
+            self._slo_total.inc()
+            self._slo_met.inc(int(bool(slo_met)))
 
     def record_reject(self, reason: str, *, had_deadline: bool = False) -> None:
         """A structured rejection (never admitted): too-large geometry
         or queue-wait timeout. A rejected deadline'd request counts as
         an SLO miss (it can never meet its deadline)."""
-        self.rejected[reason] = self.rejected.get(reason, 0) + 1
+        self._rejected.inc(1, label=reason)
         if had_deadline:
-            self.slo_total += 1
+            self._slo_total.inc()
 
     def record_preemption(self, n: int = 1) -> None:
         """A running sequence was swapped out to host memory."""
-        self.preemptions += n
+        self._preemptions.inc(n)
 
     def record_resume(self, n: int = 1) -> None:
         """A swapped-out sequence was swapped back in."""
-        self.resumes += n
+        self._resumes.inc(n)
 
     def record_ttft(self, dt: float) -> None:
         """Wall-clock submit -> first-token time for one request."""
-        self._ttft.append(dt)
+        self._ttft.observe(dt)
+
+    def record_queue_wait(self, dt: float) -> None:
+        """Wall-clock submit -> admission time for one request."""
+        self._queue_wait.observe(dt)
+
+    def record_step_compiles(self, n: int) -> None:
+        """Backend compiles observed while an engine step ran (should
+        stay 0 after warmup — the DispatchGuard invariant)."""
+        self._step_compiles.inc(n)
+
+    def record_host_sync(self, n: int = 1) -> None:
+        """A sanctioned explicit device->host sync (batched
+        ``jax.device_get``)."""
+        self._host_syncs.inc(n)
 
     def record_decode_indexed(self, n_pages: int) -> None:
         """Decode-written full pages indexed into the radix tree when
         their sequence finished."""
-        self.decode_indexed_pages += n_pages
+        self._decode_indexed.inc(n_pages)
 
     def record_prefix_lookup(
         self, hit_tokens: int, prompt_tokens: int, hit_pages: int
@@ -138,20 +351,20 @@ class ServeStats:
         """One admission's radix-tree walk: ``hit_tokens`` of the
         ``prompt_tokens``-token prompt came from ``hit_pages`` shared
         pages (0s for a miss)."""
-        self.prefix_lookups += 1
-        self.prefix_hit_tokens += hit_tokens
-        self.prefix_prompt_tokens += prompt_tokens
-        self.prefix_hit_pages += hit_pages
+        self._prefix_lookups.inc()
+        self._prefix_hit_tokens.inc(hit_tokens)
+        self._prefix_prompt_tokens.inc(prompt_tokens)
+        self._prefix_hit_pages.inc(hit_pages)
 
     def record_cow(self, n: int = 1) -> None:
         """Copy-on-write page splits (a slot writing into a shared or
         radix-indexed page got a private device-side copy)."""
-        self.cow_copies += n
+        self._cow_copies.inc(n)
 
     def record_reclaimed(self, n_pages: int) -> None:
         """Reservation pages returned to the admission budget by a
         sequence that finished before exhausting its lifetime budget."""
-        self.pages_reclaimed_early += n_pages
+        self._pages_reclaimed.inc(n_pages)
 
     # ---- folding -----------------------------------------------------
     @staticmethod
@@ -165,7 +378,8 @@ class ServeStats:
         }
 
     def summary(self) -> dict:
-        lat = np.asarray(self._step_latency, np.float64)
+        lat = np.asarray(self._step_latency.samples, np.float64)
+        occ = self._occupancy.samples
         total_time = self.prefill_time + self.decode_time
         # per-token latency: the wall time a decode step spent per emitted
         # token (steps emit one token per active slot)
@@ -213,7 +427,14 @@ class ServeStats:
                 if self.slo_total
                 else 1.0,
             },
-            "ttft_ms": self._pcts(self._ttft),
+            "ttft_ms": self._pcts(self._ttft.samples),
+            "queue_wait_ms": self._pcts(self._queue_wait.samples),
+            # DispatchGuard correlation: compiles seen during steps (0
+            # after warmup) and sanctioned explicit host syncs
+            "dispatch_guard": {
+                "step_compiles": self._step_compiles.value,
+                "host_syncs": self._host_syncs.value,
+            },
             "prefill_calls": self.prefills,
             "prefill_requests": self.prefill_requests,
             # batched admission quality: requests admitted per jit'd
@@ -238,7 +459,7 @@ class ServeStats:
             # decode throughput counts only decode-step tokens (generated
             # also includes each request's prefill-emitted first token)
             "decode_tok_s": round(
-                sum(self._step_active) / self.decode_time, 2
+                self._decode_tokens.value / self.decode_time, 2
             )
             if self.decode_time > 0
             else 0.0,
@@ -262,13 +483,13 @@ class ServeStats:
             )
             if lat.size
             else 0.0,
-            "mean_occupancy": round(float(np.mean(self._occupancy)), 4)
-            if self._occupancy
+            "mean_occupancy": round(float(np.mean(occ)), 4)
+            if occ
             else 0.0,
-            "min_occupancy": round(float(np.min(self._occupancy)), 4)
-            if self._occupancy
+            "min_occupancy": round(float(np.min(occ)), 4)
+            if occ
             else 0.0,
-            "max_occupancy": round(float(np.max(self._occupancy)), 4)
-            if self._occupancy
+            "max_occupancy": round(float(np.max(occ)), 4)
+            if occ
             else 0.0,
         }

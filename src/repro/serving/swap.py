@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.analysis.guards import hot_path
 from repro.distributed import sharding as sharding_lib
+from repro.obs import MetricsRegistry
 from repro.serving.kv_cache import PagedKVCache
 
 __all__ = ["SwapManager", "SwapRecord", "SwapStats"]
@@ -92,14 +93,57 @@ class SwapRecord:
 
 
 class SwapStats:
-    def __init__(self):
-        self.swap_outs = 0
-        self.swap_ins = 0
-        self.out_pages = 0
-        self.in_pages = 0
-        self.out_bytes = 0
-        self.in_bytes = 0
-        self.pinned_pages = 0  # shared pages spared the copy
+    """View over the engine's metrics registry (see `repro.obs`); the
+    attribute surface (``swap_outs`` etc.) is unchanged from the ad-hoc
+    int era so tests and callers keep reading plain numbers."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        self.registry = reg
+        self._swap_outs = reg.counter(
+            "repro_swap_outs_total", "sequences swapped out to host"
+        )
+        self._swap_ins = reg.counter(
+            "repro_swap_ins_total", "sequences swapped back in"
+        )
+        self._out_pages = reg.counter(
+            "repro_swap_out_pages_total", "pages copied device->host"
+        )
+        self._in_pages = reg.counter(
+            "repro_swap_in_pages_total", "pages copied host->device"
+        )
+        self._out_bytes = reg.counter(
+            "repro_swap_out_bytes_total", "bytes copied device->host"
+        )
+        self._in_bytes = reg.counter(
+            "repro_swap_in_bytes_total", "bytes copied host->device"
+        )
+        # shared pages spared the copy
+        self._pinned_pages = reg.counter(
+            "repro_swap_pinned_pages_total",
+            "shared pages pinned in place of a copy",
+        )
+
+    swap_outs = property(lambda self: self._swap_outs.value)
+    swap_ins = property(lambda self: self._swap_ins.value)
+    out_pages = property(lambda self: self._out_pages.value)
+    in_pages = property(lambda self: self._in_pages.value)
+    out_bytes = property(lambda self: self._out_bytes.value)
+    in_bytes = property(lambda self: self._in_bytes.value)
+    pinned_pages = property(lambda self: self._pinned_pages.value)
+
+    def record_out(self, pages: int, bytes_: int, pinned: int) -> None:
+        self._swap_outs.inc()
+        self._out_pages.inc(pages)
+        self._out_bytes.inc(bytes_)
+        self._pinned_pages.inc(pinned)
+
+    def record_in(self, pages: int, bytes_: int) -> None:
+        self._in_pages.inc(pages)
+        self._in_bytes.inc(bytes_)
+
+    def record_swap_in(self) -> None:
+        self._swap_ins.inc()
 
     def snapshot(self) -> dict:
         return {
@@ -119,14 +163,17 @@ class SwapManager:
         kv: PagedKVCache,
         *,
         page_in_tree: Callable[[int], bool] | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         """``page_in_tree``: the prefix cache's membership probe (None
         when the cache is off) — used both as ``free_slot``'s keep hook
         (private indexed pages park instead of freeing) and to classify
-        which pages the radix re-match can restore without a copy."""
+        which pages the radix re-match can restore without a copy.
+        ``metrics``: the engine's shared registry (the stats view
+        creates a private one when absent)."""
         self.kv = kv
         self.page_in_tree = page_in_tree
-        self.stats = SwapStats()
+        self.stats = SwapStats(metrics)
         # Restore scatter, jit'd per manager so the sharded-pool layout
         # pin (constrain_pools, jaxlint JL005) closes over this pool's
         # shardings; single-device pools close over None (no-op).
@@ -168,10 +215,9 @@ class SwapManager:
         for p in pin_pages:
             kv.incref(p)  # survives until swap_in/discard releases it
         kv.free_slot(slot, keep=self.page_in_tree)
-        self.stats.swap_outs += 1
-        self.stats.out_pages += len(host_pages)
-        self.stats.out_bytes += len(host_pages) * self.page_bytes
-        self.stats.pinned_pages += n_pin
+        self.stats.record_out(
+            len(host_pages), len(host_pages) * self.page_bytes, n_pin
+        )
         return SwapRecord(
             slot_was=slot,
             pin_pages=pin_pages,
@@ -233,12 +279,11 @@ class SwapManager:
                 jnp.asarray(idx),
                 jax.tree.map(jnp.asarray, record.host),
             )
-            self.stats.in_pages += restored
-            self.stats.in_bytes += restored * self.page_bytes
+            self.stats.record_in(restored, restored * self.page_bytes)
         for p in record.pin_pages:
             kv.unpin(p)
         record.host = None
-        self.stats.swap_ins += 1
+        self.stats.record_swap_in()
 
     def discard(self, record: SwapRecord) -> None:
         """Abandon a swapped sequence (it was cancelled or timed out):

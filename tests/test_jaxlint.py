@@ -429,6 +429,73 @@ def scatter(buffers, idx, data):
 
 
 # ----------------------------------------------------------------------
+# JL006 — obs recorder calls inside jit-decorated functions
+# ----------------------------------------------------------------------
+
+
+def test_jl006_tracer_call_in_jit():
+    src = """
+import jax
+
+@jax.jit
+def decode(tracer, toks):
+    tracer.begin(0, 1)
+    out = toks * 2
+    tracer.end(0, 1)
+    return out
+"""
+    assert codes(src) == ["JL006", "JL006"]
+
+
+def test_jl006_stats_record_and_metrics_inc_in_jit():
+    src = """
+import jax
+import functools
+
+@functools.partial(jax.jit, static_argnums=0)
+def step(n, stats, metrics, xs):
+    stats.record_host_sync()
+    metrics.inc(n)
+    return xs + n
+"""
+    assert codes(src) == ["JL006", "JL006"]
+
+
+def test_jl006_true_negatives():
+    # recorder calls outside jit are the sanctioned pattern, and
+    # non-obs bases (``x.set`` on arrays, ``seen.end``) don't match
+    src = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def step(xs, i):
+    return xs.at[i].set(0)
+
+def host_step(engine, xs):
+    engine.tracer.begin(0, 1)
+    out = step(xs, 0)
+    engine.stats.record_host_sync()
+    engine.tracer.end(0, 1)
+    return out
+"""
+    assert codes(src) == []
+
+
+def test_jl006_suppression_honored():
+    src = """
+import jax
+
+@jax.jit
+def debug_step(tracer, xs):
+    # jaxlint: disable=JL006 -- fixture: trace-time marker, documented
+    tracer.instant(0, 1)
+    return xs
+"""
+    assert codes(src) == []
+
+
+# ----------------------------------------------------------------------
 # fingerprints, baseline, CLI
 # ----------------------------------------------------------------------
 
