@@ -49,7 +49,19 @@ Three measurements on the same smoke config and shared weights:
    looser because microsecond steps amplify scheduler jitter) and must
    not change a single token. ``--trace-out`` exports the traced ring
    as Perfetto JSON, which tier 1 round-trips through the validator.
-8. **mesh** — tensor-parallel decode on a simulated 8-device host mesh
+8. **observability_live** — the full live-telemetry plane (rolling
+   windows, burn-rate SLO monitor, per-step memory gauges) on vs off,
+   same paired-repeat protocol as scenario 7 with a committed 0.95
+   monitored/off decode floor, streams bit-identical. ``--listen``
+   additionally scrapes ``/metrics`` + ``/healthz`` *mid-decode* and
+   asserts the ``/vars`` windowed percentiles agree with the final
+   ``stats_summary()``. A *slo_shed* sub-scenario overloads a
+   no-preemption engine with long low-priority decodes against a
+   deadline'd high-priority stream: with ``SloConfig(shed=True)`` the
+   CRITICAL burn state drops the queued background as structured
+   ``REJECT_SHED`` rejections and high-priority SLO attainment must be
+   strictly higher than with shedding off.
+9. **mesh** — tensor-parallel decode on a simulated 8-device host mesh
    plus 2-replica data-parallel routing, via ``benchmarks.serve_mesh``
    in a subprocess (the simulated devices must be forced before jax
    initializes a backend, which this process has already done). Tracks
@@ -478,6 +490,300 @@ def _measure_observability(
     return row
 
 
+def _measure_observability_live(
+    cfg,
+    mesh,
+    params,
+    batch: int,
+    prompt_len: int,
+    gen: int,
+    repeats: int,
+    smoke: bool,
+    listen: str | None = None,
+) -> dict:
+    """Live-plane overhead + mid-run scrape round-trip.
+
+    The monitored engine carries the whole plane — rolling windows, the
+    burn-rate monitor (shed disabled) and per-step memory gauges — vs a
+    bare engine, measured as paired repeats (median monitored/off
+    decode-tok/s ratio, same protocol as the tracer scenario). The
+    committed (non-smoke) floor is 0.95: one window tick + a burn
+    evaluation per step must stay inside 5%; the smoke floor is looser
+    because microsecond steps amplify scheduler jitter. Token streams
+    must be bit-identical — monitoring alone never changes what is
+    served.
+
+    With ``listen`` set, one extra monitored run scrapes ``/metrics``
+    and ``/healthz`` *mid-decode* (round-tripping ``obs/prom.parse``)
+    and asserts the end-of-run ``/vars`` windowed percentiles agree
+    with ``stats_summary()`` — the window covers the whole run, so the
+    raw-sample percentiles must match to exposition rounding."""
+    from repro.obs import SloConfig
+
+    max_len = prompt_len + gen + 1
+    monitored_cfg = EngineConfig(
+        max_slots=batch,
+        max_len=max_len,
+        monitor=True,
+        slo=SloConfig(
+            target=0.99, fast_window_s=5.0, slow_window_s=30.0
+        ),
+    )
+    engines = {}
+    for mode, ecfg in (
+        ("monitored", monitored_cfg),
+        ("off", EngineConfig(max_slots=batch, max_len=max_len)),
+    ):
+        eng = Engine(cfg, mesh, engine_cfg=ecfg, params=params)
+        _warm_buckets(eng, [prompt_len])
+        engines[mode] = eng
+    rng = np.random.default_rng(17)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(batch, prompt_len), dtype=np.int32
+    )
+    pairs, streams = [], {}
+    for _ in range(repeats):
+        pair = {}
+        for mode, eng in engines.items():
+            eng.reset_stats()
+            t0 = time.perf_counter()
+            for b in range(batch):
+                eng.submit(prompts[b], gen)
+            fins = eng.drain()
+            wall = time.perf_counter() - t0
+            out = eng.stats_summary()
+            out["wall_s"] = round(wall, 4)
+            pair[mode] = out
+            streams[mode] = [
+                f.tokens.tolist()
+                for f in sorted(fins, key=lambda f: f.uid)
+            ]
+        assert streams["monitored"] == streams["off"], (
+            "live monitoring changed token streams"
+        )
+        pairs.append(pair)
+    ratios = [
+        p["monitored"]["decode_tok_s"]
+        / max(p["off"]["decode_tok_s"], 1e-9)
+        for p in pairs
+    ]
+    med_i = int(np.argsort(ratios)[len(ratios) // 2])
+    ratio = round(sorted(ratios)[len(ratios) // 2], 4)
+    floor = 0.80 if smoke else 0.95
+    assert ratio >= floor, (
+        f"live monitoring blew the budget: monitored/off decode ratio "
+        f"{ratio} (floor {floor})"
+    )
+    keys = ("decode_tok_s", "p95_token_latency_ms", "wall_s")
+    row = {
+        m: {k: pairs[med_i][m][k] for k in keys}
+        for m in ("monitored", "off")
+    }
+    row["monitored_vs_off"] = ratio
+    row["overhead_pct"] = round((1.0 - ratio) * 100.0, 2)
+
+    if listen:
+        import json as _json
+        import urllib.request
+
+        from repro.obs.http import attach
+        from repro.obs.prom import parse as prom_parse
+
+        def _get(url: str) -> str:
+            with urllib.request.urlopen(url, timeout=10.0) as r:
+                assert r.status == 200, f"{url} -> {r.status}"
+                return r.read().decode()
+
+        eng = engines["monitored"]
+        srv = attach(eng, listen)
+        try:
+            eng.reset_stats()
+            for b in range(batch):
+                eng.submit(prompts[b], gen)
+            scraped = None
+            step = 0
+            while not eng.scheduler.idle or eng._rejected:
+                fins = eng.step()
+                step += 1
+                if step == max(gen // 2, 1):  # scrape mid-decode
+                    flat = prom_parse(_get(srv.url + "/metrics"))
+                    assert (
+                        flat["repro_serve_decode_steps_total"] > 0
+                    ), "mid-run exposition missing decode steps"
+                    assert _get(srv.url + "/healthz") == "ok\n"
+                    scraped = len(flat)
+            assert scraped is not None, "run too short to scrape"
+            live = _json.loads(_get(srv.url + "/vars"))
+            s = eng.stats_summary()
+            # the window spans the whole (post-reset) run: /vars raw-
+            # sample percentiles must agree with the final summary
+            for vk, sk in (
+                ("p50_ms", "p50_token_latency_ms"),
+                ("p95_ms", "p95_token_latency_ms"),
+            ):
+                got = live["token_latency_ms"][vk]
+                want = s[sk]
+                assert abs(got - want) <= max(0.02, 0.01 * want), (
+                    f"/vars {vk}={got} disagrees with "
+                    f"stats_summary {sk}={want}"
+                )
+            slo = _json.loads(_get(srv.url + "/slo"))
+            assert slo["enabled"] and slo["state"] == "OK"
+            row["live_scrape"] = {
+                "listen": srv.url,
+                "midrun_metric_samples": scraped,
+                "vars_token_p50_ms": live["token_latency_ms"]["p50_ms"],
+                "summary_token_p50_ms": s["p50_token_latency_ms"],
+                "pool_pages": live["memory"]["pool_pages"],
+            }
+        finally:
+            srv.stop()
+    return row
+
+
+def _measure_slo_shed(cfg, mesh, params, slots: int) -> dict:
+    """Burn-rate load shed under overload: shed on vs off.
+
+    Preemption is OFF, so the only defense is the queue. A wave of
+    long-decode low-priority requests pins every slot (and keeps a deep
+    backlog to re-pin any slot that frees), while short deadline'd
+    high-priority requests arrive on a steady clock. Without shedding,
+    each freed slot is immediately re-pinned by backlog, so the
+    interactive tier keeps queueing behind ~full decodes and misses.
+    With ``SloConfig(shed=True)`` the first misses drive the monitor
+    CRITICAL, the queued background is dropped as structured
+    ``REJECT_SHED`` results, and later arrivals land on free slots.
+    The headline assert: high-priority SLO attainment strictly higher
+    with shedding on, and every shed surfaced as a structured
+    rejection (never a silent drop)."""
+    from repro.obs import SloConfig
+    from repro.serving.request import REJECT_SHED
+
+    page = cfg.attn_block
+    max_len = 3 * page
+    bg_gen = 2 * page - 1  # fills a slot end-to-end, no capacity finish
+    n_bg = 4 * slots
+    hi_gap, hi_dl = 6, 10
+    # misses only surface when a late request *finishes* (first bg wave
+    # boundary), so the interactive stream must outlive the background
+    # horizon for the post-CRITICAL shed to protect later arrivals
+    n_hi = ((n_bg // slots) * bg_gen) // hi_gap
+    rng = np.random.default_rng(23)
+    items = [
+        workloads.WorkItem(
+            arrival_step=0,
+            prompt=rng.integers(1, cfg.vocab_size, page).astype(np.int32),
+            max_new_tokens=bg_gen,
+            priority=0,
+        )
+        for _ in range(n_bg)
+    ]
+    items += [
+        workloads.WorkItem(
+            arrival_step=4 + hi_gap * k,
+            prompt=rng.integers(
+                1, cfg.vocab_size, int(rng.integers(6, page // 2))
+            ).astype(np.int32),
+            max_new_tokens=3,
+            priority=1,
+            deadline_steps=hi_dl,
+        )
+        for k in range(n_hi)
+    ]
+    lens = sorted({w.prompt.size for w in items})
+
+    # calibrate seconds-per-step on a bare engine (the monitor changes
+    # no compiled program), then arm both modes with the same deadlines
+    cal = Engine(
+        cfg,
+        mesh,
+        engine_cfg=EngineConfig(
+            max_slots=slots, max_len=max_len, preemption=False
+        ),
+        params=params,
+    )
+    _warm_buckets(cal, lens)
+    workloads.replay(cal, items, step_s=None)
+    _, wall, steps = workloads.replay(cal, items, step_s=None)
+    step_s = wall / max(steps, 1)
+    # burn windows sized in measured steps: misses must land in both
+    # windows the tick they are recorded, and age out ~a bg-gen later
+    fast_s = max(8 * step_s, 5e-3)
+
+    def _hi_attainment(fins) -> tuple[int, int]:
+        hi = [
+            f
+            for f in fins
+            if f.schedule.priority == 1
+            and f.schedule.deadline_s is not None
+            and f.reject_reason != REJECT_SHED
+        ]
+        return sum(1 for f in hi if f.slo_met), len(hi)
+
+    out: dict = {}
+    for mode, shed in (("off", False), ("on", True)):
+        eng = Engine(
+            cfg,
+            mesh,
+            engine_cfg=EngineConfig(
+                max_slots=slots,
+                max_len=max_len,
+                preemption=False,
+                monitor=True,
+                slo=SloConfig(
+                    target=0.9,
+                    fast_window_s=fast_s,
+                    slow_window_s=3 * fast_s,
+                    warn_burn=2.0,
+                    critical_burn=6.0,
+                    shed=shed,
+                    shed_max_per_tick=2 * slots,
+                ),
+            ),
+            params=params,
+        )
+        _warm_buckets(eng, lens)
+        workloads.replay(eng, items, step_s=None)  # warm, unarmed
+        eng.reset_stats()
+        fins, wall, steps = workloads.replay(eng, items, step_s=step_s)
+        stats = eng.stats_summary()
+        sheds = [f for f in fins if f.reject_reason == REJECT_SHED]
+        met, n_dl = _hi_attainment(fins)
+        out[mode] = {
+            "requests": len(fins),
+            "hi_with_deadline": n_dl,
+            "hi_slo_met": met,
+            "hi_attainment": round(met / n_dl, 4) if n_dl else 1.0,
+            "sheds": len(sheds),
+            "rejected_total": stats["rejected"]["total"],
+            "slo_transitions": dict(eng._slo_mon.transitions),
+            "wall_s": round(wall, 4),
+            "steps": steps,
+        }
+        if shed:
+            assert sheds, "overload under CRITICAL never shed"
+            assert all(
+                f.finish_reason == "rejected"
+                and f.reject_reason == REJECT_SHED
+                for f in sheds
+            ), "sheds must surface as structured rejections"
+            assert out["on"]["slo_transitions"].get("CRITICAL", 0) >= 1
+        else:
+            assert not sheds and stats["rejected"]["total"] == 0, (
+                "shedding disabled must never reject"
+            )
+    out["hi_attainment_gain"] = round(
+        out["on"]["hi_attainment"] - out["off"]["hi_attainment"], 4
+    )
+    assert out["on"]["hi_attainment"] > out["off"]["hi_attainment"], (
+        f"shedding did not raise high-priority attainment: "
+        f"on={out['on']['hi_attainment']} "
+        f"off={out['off']['hi_attainment']}"
+    )
+    out["step_s"] = round(step_s, 6)
+    return out
+
+
 def _measure_mesh(smoke: bool) -> dict:
     """Run ``benchmarks.serve_mesh`` in a subprocess and parse its JSON.
 
@@ -613,6 +919,7 @@ def run(
     smoke: bool = False,
     guards: bool = False,
     trace_out: str | None = None,
+    listen: str | None = None,
 ) -> None:
     cfg = registry.get_smoke(ARCH, sparse=True)
     batch, prompt_len, gen, repeats = BATCH, PROMPT_LEN, GEN, 3
@@ -795,6 +1102,15 @@ def run(
         trace_out=trace_out,
     )
 
+    # ---- observability_live: the full telemetry plane (windows + SLO
+    # monitor + memory gauges) vs a bare engine, plus the burn-rate
+    # load-shed scenario; --listen adds a mid-run /metrics scrape
+    obs_live = _measure_observability_live(
+        cfg, mesh, server.params, batch, prompt_len, gen, repeats,
+        smoke, listen=listen,
+    )
+    obs_live["slo_shed"] = _measure_slo_shed(cfg, mesh, server.params, batch)
+
     # ---- goodput: SLO-aware scheduling scenarios (burst / long-tail /
     # multi-turn chat) over seeded workload traces
     good = _measure_goodput(cfg, mesh, server.params, batch, smoke)
@@ -828,6 +1144,7 @@ def run(
         "decode_by_sampler": by_sampler,
         "dispatch_guard": dispatch_guard,
         "observability": obs,
+        "observability_live": obs_live,
         "prefix_cache": prefix,
         "goodput": good,
         "mesh": meshrow,
@@ -888,6 +1205,24 @@ def run(
         f";events={obs['events_recorded']}",
     )
     emit(
+        "serve_engine/observability_live",
+        1e6 / max(obs_live["monitored"]["decode_tok_s"], 1e-9),
+        f"monitored_tok_s={obs_live['monitored']['decode_tok_s']}"
+        f";off_tok_s={obs_live['off']['decode_tok_s']}"
+        f";monitored_vs_off={obs_live['monitored_vs_off']}x"
+        f";overhead_pct={obs_live['overhead_pct']}",
+    )
+    shed = obs_live["slo_shed"]
+    emit(
+        "serve_engine/slo_shed",
+        1e6 * (1.0 - shed["on"]["hi_attainment"] + 1e-9),
+        f"hi_attainment_on={shed['on']['hi_attainment']}"
+        f";hi_attainment_off={shed['off']['hi_attainment']}"
+        f";gain={shed['hi_attainment_gain']}"
+        f";sheds={shed['on']['sheds']}"
+        f";critical_transitions={shed['on']['slo_transitions'].get('CRITICAL', 0)}",
+    )
+    emit(
         "serve_engine/prefix_cache",
         1e6 * prefix["on"]["prefill_s"],
         f"admission_speedup={prefix['admission_speedup']}x"
@@ -934,5 +1269,11 @@ if __name__ == "__main__":
                     help="write the observability scenario's traced "
                          "engine ring as Perfetto JSON (tier-1 "
                          "round-trips and validates it)")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve live telemetry from the monitored "
+                         "engine during the observability_live "
+                         "scenario and scrape /metrics mid-run "
+                         "(port 0 = ephemeral)")
     _args = ap.parse_args()
-    run(smoke=_args.smoke, guards=_args.guards, trace_out=_args.trace_out)
+    run(smoke=_args.smoke, guards=_args.guards, trace_out=_args.trace_out,
+        listen=_args.listen)

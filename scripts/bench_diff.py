@@ -81,6 +81,26 @@ METRICS = [
         ("observability", "traced", "decode_tok_s"),
         True,
     ),
+    (
+        "live plane monitored/off decode",
+        ("observability_live", "monitored_vs_off"),
+        True,
+    ),
+    (
+        "live plane monitored decode tok/s",
+        ("observability_live", "monitored", "decode_tok_s"),
+        True,
+    ),
+    (
+        "slo-shed hi-pri attainment (on)",
+        ("observability_live", "slo_shed", "on", "hi_attainment"),
+        True,
+    ),
+    (
+        "slo-shed attainment gain",
+        ("observability_live", "slo_shed", "hi_attainment_gain"),
+        True,
+    ),
     ("mesh tp=1 decode tok/s", ("mesh", "by_tp", "1", "decode_tok_s"), True),
     ("mesh tp=8 decode tok/s", ("mesh", "by_tp", "8", "decode_tok_s"), True),
     ("mesh streams equal", ("mesh", "streams_equal"), True),

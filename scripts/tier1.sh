@@ -36,11 +36,16 @@ python -m repro.analysis.jaxlint src --baseline jaxlint_baseline.txt
 # --trace-out round-trips the observability scenario's span ring
 # through the Perfetto exporter; the validator then proves the file is
 # openable (monotonic timestamps per track, matched B/E pairs, nonempty
-# slot tracks) so a tracer regression can't ship an unreadable timeline.
+# slot tracks, monotonic counter series) so a tracer regression can't
+# ship an unreadable timeline. --listen serves live telemetry from the
+# monitored engine on an ephemeral port and scrapes /metrics +
+# /healthz *mid-decode* (round-tripping obs/prom.parse), so an
+# exposition or windowed-aggregation regression fails the gate here.
 echo "tier1: benchmarks/serve_engine.py --smoke"
 trace_out="$(mktemp -t tier1_trace_XXXXXX.json)"
 trap 'rm -f "$trace_out"' EXIT
-python -m benchmarks.serve_engine --smoke --trace-out "$trace_out" > /dev/null
+python -m benchmarks.serve_engine --smoke --trace-out "$trace_out" \
+    --listen 127.0.0.1:0 > /dev/null
 echo "tier1: perfetto trace round-trip"
 python - "$trace_out" <<'EOF'
 import sys

@@ -106,6 +106,32 @@ def _write_obs(served, metrics, args) -> None:
         print(f"wrote Prometheus snapshot to {args.metrics_out}")
 
 
+def _maybe_listen(served, args):
+    """Start the live scrape endpoint (``--listen``) before draining.
+    ``served`` is the Engine or ReplicaRouter; returns the running
+    ``MetricsServer`` or None."""
+    if not args.listen:
+        return None
+    from repro.obs.http import attach
+
+    server = attach(served, args.listen)
+    print(f"live telemetry at {server.url} "
+          "(/metrics /healthz /vars /slo)")
+    return server
+
+
+def _shutdown_live(server, engines, args) -> None:
+    """Stop the ``--listen`` endpoint and report flight-recorder
+    incidents captured during the run."""
+    if server is not None:
+        server.stop()
+    if args.flight_dir:
+        n = sum(len(eng._flight.incidents) for eng in engines
+                if eng._flight is not None)
+        print(f"flight recorder: {n} incident bundle(s) "
+              f"under {args.flight_dir}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=registry.ARCH_NAMES, required=True)
@@ -193,6 +219,29 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a Prometheus text-exposition snapshot "
                          "of the serving metrics after draining")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve live /metrics /healthz /vars /slo over "
+                         "HTTP while running (port 0 = ephemeral; "
+                         "implies --monitor 30)")
+    ap.add_argument("--monitor", type=float, default=0.0, metavar="SECS",
+                    help="rolling live-telemetry window in seconds "
+                         "(0 = off; feeds /vars and the SLO monitor)")
+    ap.add_argument("--slo-target", type=float, default=0.0,
+                    help="SLO attainment objective, e.g. 0.99 (0 = "
+                         "burn-rate monitor off)")
+    ap.add_argument("--slo-fast-window", type=float, default=60.0,
+                    help="fast burn-rate window in seconds")
+    ap.add_argument("--slo-slow-window", type=float, default=300.0,
+                    help="slow burn-rate window in seconds")
+    ap.add_argument("--slo-shed", action="store_true",
+                    help="shed lowest-priority queued requests while "
+                         "the burn-rate state is CRITICAL (structured "
+                         "rejections; off = monitor only)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="arm the flight recorder: write incident "
+                         "bundles (trace + metrics + config) under DIR "
+                         "on step-time spikes, post-warmup compiles and "
+                         "SLO CRITICAL transitions")
     args = ap.parse_args()
 
     cfg = (
@@ -253,6 +302,19 @@ def main():
         return
 
     max_len = args.max_len or (args.prompt_len + args.gen + 1)
+    slo = None
+    if args.slo_target:
+        from repro.obs import SloConfig
+
+        slo = SloConfig(
+            target=args.slo_target,
+            fast_window_s=args.slo_fast_window,
+            slow_window_s=args.slo_slow_window,
+            shed=args.slo_shed,
+        )
+    # --listen without an explicit window still needs live aggregation
+    # behind /vars; the SLO monitor sizes its own window when set
+    monitor = args.monitor if args.monitor else bool(args.listen)
     ecfg = EngineConfig(
         max_slots=args.slots or args.batch,
         max_len=max_len,
@@ -264,6 +326,9 @@ def main():
         preemption=not args.no_preemption,
         preempt_min_steps=args.preempt_min_steps,
         trace=bool(args.trace or args.trace_out),
+        monitor=monitor,
+        slo=slo,
+        flight_dir=args.flight_dir,
     )
     schedule = ScheduleParams(
         priority=args.priority,
@@ -291,12 +356,13 @@ def main():
                 sampling=dataclasses.replace(sp0, seed=args.seed + b),
                 schedule=schedule,
             )
+        server = _maybe_listen(router, args)
         t0 = time.perf_counter()
         finished = router.drain()
         dt = time.perf_counter() - t0
         total = sum(len(f.tokens) for f in finished)
         s = router.stats_summary()
-        per = [int(rep["finished"]) for rep in s["per_replica"]]
+        per = [int(rep["requests_finished"]) for rep in s["per_replica"]]
         print(
             f"served {len(finished)} requests / {total} tokens in "
             f"{dt:.2f}s ({total / dt:.1f} tok/s end-to-end, "
@@ -306,6 +372,7 @@ def main():
             f"per-replica finished: {per})"
         )
         _write_obs(router, router.merged_metrics(), args)
+        _shutdown_live(server, router.engines, args)
         grid = np.stack(
             [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
         )
@@ -328,6 +395,7 @@ def main():
             sampling=dataclasses.replace(sp0, seed=args.seed + b),
             schedule=schedule,
         )
+    server = _maybe_listen(engine, args)
     t0 = time.perf_counter()
     finished = engine.drain()
     dt = time.perf_counter() - t0
@@ -363,6 +431,7 @@ def main():
             f"evicted, {pc['cow_copies']} COW)"
         )
     _write_obs(engine, engine.metrics, args)
+    _shutdown_live(server, [engine], args)
     grid = np.stack(
         [f.tokens for f in sorted(finished, key=lambda f: f.uid)[:2]]
     )

@@ -94,9 +94,10 @@ class Counter(_Metric):
 
     @property
     def value(self) -> int | float:
-        if self._by_label:
-            return sum(self._by_label.values())
-        return self._value
+        # base + labeled: a counter inc'd both ways (or merged from a
+        # mixed pair of registries) must not silently drop the unlabeled
+        # part. sum() of an empty dict is int 0, preserving int-ness.
+        return self._value + sum(self._by_label.values())
 
     def get(self, label: Hashable) -> int | float:
         return self._by_label.get(label, 0)
@@ -138,6 +139,12 @@ class Histogram(_Metric):
     ``observe`` appends the raw value (exact percentiles for the
     summary) and bumps the first bucket whose bound >= v (cumulative
     counts for the prom exposition).
+
+    Zero-sample contract: the live ``/metrics`` endpoint scrapes
+    registries *before* the first request lands, so every statistic is
+    well-defined on an empty histogram — ``percentile``/``mean``/
+    ``min``/``max`` return 0.0 (never NaN, never raise) and the prom
+    exposition renders all-zero bucket/sum/count series.
     """
 
     def __init__(

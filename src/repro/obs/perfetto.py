@@ -1,8 +1,10 @@
 """Chrome trace-event (Perfetto-compatible) JSON export + validation.
 
 ``export_perfetto({pid: tracer}, path)`` writes the classic JSON trace
-format — ``{"traceEvents": [...]}`` with ``B``/``E``/``I``/``X`` phases
-— that ui.perfetto.dev and ``chrome://tracing`` both load.  Each tracer
+format — ``{"traceEvents": [...]}`` with ``B``/``E``/``I``/``X`` span
+phases plus ``C`` counter samples (pool occupancy, queue depth, running
+slots render as counter lanes under the spans) — that ui.perfetto.dev
+and ``chrome://tracing`` both load.  Each tracer
 becomes one process (replica index as ``pid``); each tracer track (one
 per slot, one per engine phase, one for the queue) becomes one thread
 with a ``thread_name`` metadata record, so the timeline renders as
@@ -21,7 +23,7 @@ from __future__ import annotations
 import json
 from typing import TYPE_CHECKING, Mapping
 
-from .trace import KIND_B, KIND_E, KIND_I, KIND_X
+from .trace import KIND_B, KIND_C, KIND_E, KIND_I, KIND_X
 
 if TYPE_CHECKING:  # pragma: no cover
     from .trace import Tracer
@@ -81,6 +83,15 @@ def _tracer_events(pid: int, tracer: "Tracer") -> list[dict]:
                     "args": args,
                 }
             )
+        elif ev["kind"] == KIND_C:
+            # counter sample: args carries the series value (Perfetto
+            # renders each C name as its own counter lane)
+            out.append(
+                {
+                    "ph": "C", "pid": pid, "tid": tid, "ts": ts_us,
+                    "name": ev["name"], "args": {"value": ev["a0"]},
+                }
+            )
     # Close spans still open at export with a truncated-flagged E so
     # every B in the file pairs (live decode spans mid-traffic, or spans
     # force-closed conceptually by reset before their end() ran).
@@ -137,6 +148,10 @@ def validate_trace(payload: dict) -> dict:
         non-decreasing in file order;
       * per track, ``B``/``E`` pairs match by name, properly nested,
         with no unmatched event left at end of file;
+      * ``C`` counter samples carry a numeric args value and, per
+        (pid, tid, name) counter series, non-decreasing timestamps
+        (the per-track check would let two interleaved series hide a
+        regression; the per-series check would not);
       * every track with events has a ``thread_name`` metadata record;
       * at least one slot track (thread name ``slot*``) has events.
     """
@@ -149,6 +164,7 @@ def validate_trace(payload: dict) -> dict:
     last_ts: dict[tuple, float] = {}
     stacks: dict[tuple, list[str]] = {}
     counts: dict[tuple, int] = {}
+    counter_ts: dict[tuple, float] = {}
     n_spans = 0
     for i, ev in enumerate(events):
         if not isinstance(ev, dict) or "ph" not in ev:
@@ -188,6 +204,22 @@ def validate_trace(payload: dict) -> dict:
             if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
                 raise TraceValidationError(f"event {i}: X without dur")
             n_spans += 1
+        elif ev["ph"] == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                isinstance(v, (int, float)) and not isinstance(v, bool)
+                for v in args.values()
+            ):
+                raise TraceValidationError(
+                    f"event {i}: C without numeric args values"
+                )
+            series = (*key, ev.get("name"))
+            if ts < counter_ts.get(series, 0.0):
+                raise TraceValidationError(
+                    f"event {i}: counter ts not monotonic on series "
+                    f"{series} ({ts} < {counter_ts[series]})"
+                )
+            counter_ts[series] = ts
         elif ev["ph"] not in ("I", "i"):
             raise TraceValidationError(f"event {i}: unknown phase {ev['ph']!r}")
     for key, stack in stacks.items():
@@ -209,6 +241,7 @@ def validate_trace(payload: dict) -> dict:
         "tracks": len(counts),
         "spans": n_spans,
         "slot_tracks": len(slot_tracks),
+        "counter_series": len(counter_ts),
     }
 
 

@@ -31,6 +31,8 @@ def _fmt_value(v: int | float) -> str:
         return str(int(v))
     if isinstance(v, int):
         return str(v)
+    if math.isnan(v):
+        return "NaN"  # canonical exposition spelling (repr gives 'nan')
     if math.isinf(v):
         return "+Inf" if v > 0 else "-Inf"
     return repr(float(v))

@@ -21,9 +21,12 @@ Design constraints, in order:
      track and drops orphaned ``E``s whose ``B`` was overwritten.
 
 Event model (mirrors the Chrome trace-event phases the exporter emits):
-``B``/``E`` nested spans per track, ``I`` instants, and ``X`` complete
+``B``/``E`` nested spans per track, ``I`` instants, ``X`` complete
 events carrying an explicit (ts, dur) — used for queue-wait spans whose
-start is the request's submit timestamp, recorded only at admission.
+start is the request's submit timestamp, recorded only at admission —
+and ``C`` counter samples (a0 = the integer value; the exporter renders
+them as Perfetto counter tracks under the spans, e.g. pool occupancy
+and queue depth per step).
 """
 
 from __future__ import annotations
@@ -33,9 +36,9 @@ from time import perf_counter_ns
 import numpy as np
 
 __all__ = ["Tracer", "NullTracer", "NULL_TRACER", "KIND_B", "KIND_E",
-           "KIND_I", "KIND_X"]
+           "KIND_I", "KIND_X", "KIND_C"]
 
-KIND_B, KIND_E, KIND_I, KIND_X = 0, 1, 2, 3
+KIND_B, KIND_E, KIND_I, KIND_X, KIND_C = 0, 1, 2, 3, 4
 
 
 class Tracer:
@@ -128,6 +131,12 @@ class Tracer:
         queue wait stamped once at admission."""
         self._record(KIND_X, track, name, ts_ns, max(0, dur_ns), a0, a1)
 
+    def counter(self, track: int, name: int, value: int) -> None:
+        """One counter sample (Chrome ``C`` phase): the series ``name``
+        on ``track`` takes integer ``value`` as of now.  Counters never
+        touch the open-span stacks."""
+        self._record(KIND_C, track, name, perf_counter_ns(), 0, int(value), 0)
+
     # -- lifecycle -----------------------------------------------------
 
     def reset(self) -> None:
@@ -219,6 +228,9 @@ class NullTracer:
         self, track: int, name: int, ts_ns: int, dur_ns: int,
         a0: int = 0, a1: int = 0,
     ) -> None:
+        return None
+
+    def counter(self, track: int, name: int, value: int) -> None:
         return None
 
     def reset(self) -> None:

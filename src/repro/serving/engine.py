@@ -33,6 +33,8 @@ the real prompt length — bucket padding never pins real pages.
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 import time
 
 import jax
@@ -41,13 +43,24 @@ import numpy as np
 
 from repro.analysis.guards import compile_events_total, hot_path
 from repro.configs.base import ModelConfig
-from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
+from repro.obs import (
+    NULL_TRACER,
+    BurnRateMonitor,
+    FlightRecorder,
+    MetricsRegistry,
+    SloConfig,
+    SpikeDetector,
+    Tracer,
+    WindowedView,
+)
+from repro.obs.slo import CRITICAL
 from repro.distributed import sharding
 from repro.models import transformer as T
 from repro.serving import sampling as sampling_lib
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.prefix import PrefixCache, PrefixStats
 from repro.serving.request import (
+    REJECT_SHED,
     REJECT_TIMEOUT,
     REJECT_TOO_LARGE,
     FinishedRequest,
@@ -89,7 +102,20 @@ class EngineConfig:
     ``trace`` turns on span tracing (``repro.obs``): True for the
     default ring capacity, an int for an explicit event capacity. Off
     (the default), the engine binds the no-op tracer and does zero
-    tracing work."""
+    tracing work.
+
+    ``monitor`` turns on the live telemetry plane (``repro.obs.windows``):
+    True for a 30 s rolling window, a float for an explicit window in
+    seconds — the engine ticks a ``WindowedView`` once per step and
+    samples device-memory gauges, and ``windowed_vars()`` / the
+    ``/vars`` endpoint answer over it. ``slo`` attaches a multi-window
+    burn-rate monitor (``repro.obs.slo.SloConfig``; implies monitoring,
+    and widens the window to cover its slow timescale).  ``flight_dir``
+    arms the flight recorder: anomalies (decode-step time exceeding
+    ``spike_factor`` times the warm EWMA baseline, post-warmup step
+    compiles, SLO CRITICAL transitions) snapshot the tracer ring +
+    metrics + config into incident bundles under that directory.  All
+    four default off — a bare engine does zero live-plane work."""
 
     def __init__(
         self,
@@ -105,6 +131,10 @@ class EngineConfig:
         preemption: bool = True,
         preempt_min_steps: int = 4,
         trace: bool | int = False,
+        monitor: bool | float = False,
+        slo: SloConfig | None = None,
+        flight_dir: str | None = None,
+        spike_factor: float = 8.0,
     ):
         self.max_slots = max_slots
         self.max_len = max_len
@@ -122,6 +152,24 @@ class EngineConfig:
         if trace is not True and trace is not False and int(trace) < 0:
             raise ValueError("trace must be a bool or a capacity >= 0")
         self.trace = trace
+        # identity checks, not equality: 1.0 == True in Python, and a
+        # 1-second window must not be mistaken for the bool default
+        if (
+            monitor is not True
+            and monitor is not False
+            and float(monitor) <= 0
+        ):
+            raise ValueError(
+                "monitor must be a bool or a window in seconds > 0"
+            )
+        self.monitor = monitor
+        if slo is not None and not isinstance(slo, SloConfig):
+            raise TypeError("slo must be a repro.obs.SloConfig or None")
+        self.slo = slo
+        self.flight_dir = flight_dir
+        if spike_factor <= 1.0:
+            raise ValueError("spike_factor must be > 1")
+        self.spike_factor = spike_factor
         if preempt_min_steps < 1:
             raise ValueError("preempt_min_steps must be >= 1")
         self.preempt_min_steps = preempt_min_steps
@@ -140,6 +188,21 @@ class EngineConfig:
         if sampler_candidates < 0:
             raise ValueError("sampler_candidates must be >= 0")
 
+    @property
+    def monitor_window_s(self) -> float | None:
+        """Effective rolling-window retention in seconds (None = the
+        live plane is off). ``slo`` implies monitoring and widens the
+        window to cover its slow burn timescale."""
+        if self.monitor is False and self.slo is None:
+            return None
+        if self.monitor is True or self.monitor is False:
+            w = 30.0
+        else:
+            w = float(self.monitor)
+        if self.slo is not None:
+            w = max(w, self.slo.slow_window_s)
+        return w
+
     def rounded(self, page: int) -> "EngineConfig":
         max_len = -(-self.max_len // page) * page
         return EngineConfig(
@@ -154,6 +217,10 @@ class EngineConfig:
             preemption=self.preemption,
             preempt_min_steps=self.preempt_min_steps,
             trace=self.trace,
+            monitor=self.monitor,
+            slo=self.slo,
+            flight_dir=self.flight_dir,
+            spike_factor=self.spike_factor,
         )
 
 
@@ -436,6 +503,48 @@ class Engine:
         self._fancy_slots: set[int] = set()
         self._uid = 0
         self._step_idx = 0
+        # ---- live telemetry plane (all opt-in; see EngineConfig) -----
+        window_s = ecfg.monitor_window_s
+        # re-evaluates self.metrics every tick, so the view follows
+        # reset_stats()'s registry swap (window restarts from zero)
+        self._window = (
+            WindowedView(lambda: self.metrics, window_s=window_s)
+            if window_s is not None
+            else None
+        )
+        # serializes window ticks/reads between the step loop and the
+        # /vars scrape thread (MetricsServer handlers)
+        self._obs_lock = threading.Lock()
+        self._slo_mon = (
+            BurnRateMonitor(self._window, ecfg.slo)
+            if ecfg.slo is not None
+            else None
+        )
+        self._flight = (
+            FlightRecorder(ecfg.flight_dir) if ecfg.flight_dir else None
+        )
+        # the spike detector exists only to feed the flight recorder
+        self._spike = (
+            SpikeDetector(factor=ecfg.spike_factor)
+            if self._flight is not None
+            else None
+        )
+        # compile-trip captures arm only after the first clean
+        # (zero-compile) step: warmup-adjacent compiles — fresh prefill
+        # buckets, the sampled variants — are expected, not incidents
+        self._flight_armed = False
+        self._roofline: dict | None = None
+        # backend allocator introspection, probed once: platforms
+        # without memory_stats (CPU) silently report 0 bytes
+        self._device_memory_stats = None
+        if self._window is not None:
+            try:
+                dev = np.asarray(self.mesh.devices).flat[0]
+                fn = getattr(dev, "memory_stats", None)
+                if fn is not None and fn():
+                    self._device_memory_stats = fn
+            except Exception:
+                self._device_memory_stats = None
 
     # ---- observability -----------------------------------------------
     def _intern_trace_ids(self) -> None:
@@ -464,6 +573,14 @@ class Engine:
         self._nm_preempt = tr.name("preempt")
         self._nm_cow = tr.name("cow_split")
         self._nm_prefix_match = tr.name("prefix_match")
+        self._nm_roofline = tr.name("roofline")
+        # counter lanes (Perfetto "C" samples, one set per step): pool
+        # occupancy, queue depth, running slots render as counter tracks
+        # under the span lanes
+        self._tk_counters = tr.track("counters")
+        self._nm_ctr_live = tr.name("pool_live_pages")
+        self._nm_ctr_queue = tr.name("queue_depth")
+        self._nm_ctr_running = tr.name("running_slots")
         # scheduler queue-lifecycle instants (see _sched_event)
         self._sched_names = {
             kind: tr.name(kind)
@@ -536,7 +653,14 @@ class Engine:
 
     def _reject(self, req: Request, reason: str) -> FinishedRequest:
         self.stats.record_reject(
-            reason, had_deadline=req.schedule.deadline_s is not None
+            reason,
+            # shed requests are excluded from SLO accounting: shedding
+            # is the burn-rate monitor's own *response* to misses, and
+            # counting the sheds as new misses would latch CRITICAL
+            had_deadline=(
+                req.schedule.deadline_s is not None
+                and reason != REJECT_SHED
+            ),
         )
         self.tracer.instant(self._tk_queue, self._nm_rejected, req.uid)
         return FinishedRequest(
@@ -1169,6 +1293,7 @@ class Engine:
                 finished.append(self._finish(st_, reason="capacity"))
 
         active = self.scheduler.active()
+        decode_dt: float | None = None
         if active:
             tokens = np.zeros((self.ecfg.max_slots,), np.int32)
             positions = np.zeros((self.ecfg.max_slots,), np.int32)
@@ -1211,7 +1336,7 @@ class Engine:
                 tr.begin(self._tk_sync, self._nm_host_sync)
                 nxt = jax.device_get(toks_dev)  # jaxlint: disable=JL001 -- the one batched per-step fetch of the next-token row
                 tr.end(self._tk_sync, self._nm_host_sync, len(active))
-            dt = time.perf_counter() - t0
+            dt = decode_dt = time.perf_counter() - t0
             tr.end(
                 self._tk_decode,
                 self._nm_decode_step,
@@ -1234,9 +1359,302 @@ class Engine:
         for record in self._pending_swaps:
             self.swap.finalize(record)
         self._pending_swaps.clear()
-        self.stats.record_step_compiles(compile_events_total() - c0)
+        step_compiles = compile_events_total() - c0
+        self.stats.record_step_compiles(step_compiles)
         self._step_idx += 1
+        self._observe_step(decode_dt, len(active), step_compiles)
         return finished
+
+    # ---- live telemetry (end of step, host-side) ---------------------
+    def _observe_step(
+        self,
+        decode_dt: float | None,
+        n_active: int,
+        step_compiles: int,
+    ) -> None:
+        """End-of-step observability hook — after the step's one
+        sanctioned sync, never inside a jit'd program. With tracing,
+        monitoring and the flight recorder all off this is three no-op
+        tracer calls and an early return (the NULL tracer makes no
+        clock calls — the zero-obs-work invariant the tests assert)."""
+        tr = self.tracer
+        kv = self.kv
+        live = kv.n_pages - kv.free_pages - kv.cached_pages
+        tr.counter(self._tk_counters, self._nm_ctr_live, live)
+        tr.counter(
+            self._tk_counters,
+            self._nm_ctr_queue,
+            len(self.scheduler.waiting),
+        )
+        tr.counter(self._tk_counters, self._nm_ctr_running, n_active)
+        if self._flight is not None:
+            if step_compiles == 0:
+                self._flight_armed = True
+            elif self._flight_armed:
+                # post-warmup compile: the DispatchGuard invariant
+                # tripped mid-traffic — snapshot what led up to it
+                self._capture_incident(
+                    "dispatch_guard_trip",
+                    {"step_compiles": step_compiles},
+                )
+            if self._spike is not None and decode_dt is not None:
+                baseline = self._spike.baseline
+                if self._spike.observe(decode_dt):
+                    self._capture_incident(
+                        "step_time_spike",
+                        {
+                            "decode_step_s": decode_dt,
+                            "baseline_s": baseline,
+                            "factor": self.ecfg.spike_factor,
+                        },
+                    )
+        if self._window is None:
+            return
+        self._sample_memory(live)
+        with self._obs_lock:
+            self._window.tick()
+            status = (
+                self._slo_mon.evaluate()
+                if self._slo_mon is not None
+                else None
+            )
+        if status is None:
+            return
+        self.stats.record_slo_state(
+            status["state_code"], status["fast_burn"], status["slow_burn"]
+        )
+        if status["state"] == CRITICAL and self.ecfg.slo.shed:
+            self._shed_queued(self.ecfg.slo.shed_max_per_tick)
+        if status["transitioned_to"] == CRITICAL and self._flight is not None:
+            self._capture_incident("slo_critical", {"slo": status})
+
+    def _sample_memory(self, live_pages: int) -> None:
+        """Per-step device-memory gauges: pool occupancy/fragmentation,
+        COW reserve, host-swap residency, and the backend allocator's
+        bytes-in-use where the platform exposes them."""
+        host_bytes = sum(
+            rec.n_host for _, rec in self._swapped.values()
+        ) * self.swap.page_bytes
+        dev_bytes = 0
+        if self._device_memory_stats is not None:
+            try:
+                dev_bytes = int(
+                    self._device_memory_stats().get("bytes_in_use", 0)
+                )
+            except Exception:  # backend stopped cooperating: disable
+                self._device_memory_stats = None
+        self.stats.record_memory(
+            n_pages=self.kv.n_pages,
+            live_pages=live_pages,
+            cached_pages=self.kv.cached_pages,
+            reserved_pages=self._reserved_pages(),
+            cow_reserve_pages=sum(self._cow_reserve.values()),
+            host_swap_bytes=host_bytes,
+            device_bytes_in_use=dev_bytes,
+        )
+
+    def _shed_queued(self, max_n: int) -> int:
+        """CRITICAL-state load shed: reject up to ``max_n`` waiting
+        requests from the lowest priority class present, newest-queued
+        first (within a class the queue is deadline-then-FCFS ordered,
+        so the tail is the least urgent). Swapped-out sequences are
+        exempt — they already hold device work and always resume.
+        Sheds surface as structured ``REJECT_SHED`` results delivered
+        by the next ``step()``, never silent drops."""
+        cands = [
+            r
+            for r in self.scheduler.waiting
+            if r.uid not in self._swapped
+        ]
+        if not cands:
+            return 0
+        lowest = min(r.schedule.priority for r in cands)
+        shed = [r for r in cands if r.schedule.priority == lowest]
+        shed = shed[-max_n:][::-1]
+        for req in shed:
+            self.scheduler.remove(req)
+            self._rejected.append(self._reject(req, REJECT_SHED))
+        return len(shed)
+
+    def _capture_incident(self, kind: str, context: dict) -> str | None:
+        path = self._flight.capture(
+            kind,
+            tracer=self.tracer,
+            metrics=self.metrics,
+            config=self._config_dict(),
+            context={**context, "step": self._step_idx},
+        )
+        if path is not None:
+            self.stats.record_flight_incident(kind)
+        return path
+
+    def _config_dict(self) -> dict:
+        e = self.ecfg
+        return {
+            "max_slots": e.max_slots,
+            "max_len": e.max_len,
+            "n_pages": self.kv.n_pages,
+            "lookahead": e.lookahead,
+            "max_prefill_batch": e.max_prefill_batch,
+            "prefix_cache": e.prefix_cache,
+            "preemption": e.preemption,
+            "paged_impl": self.paged_impl,
+            "spike_factor": e.spike_factor,
+            "slo": dataclasses.asdict(e.slo) if e.slo else None,
+        }
+
+    def windowed_vars(self, span_s: float | None = None) -> dict:
+        """Live rolling-window stats (the ``/vars`` endpoint). Safe to
+        call from the scrape thread: ticks and reads under the obs
+        lock, so it never races the step loop's own tick. Percentiles
+        come from the window's retained raw samples — a window covering
+        the whole run agrees exactly with ``stats_summary()``."""
+        if self._window is None:
+            return {"enabled": False}
+        with self._obs_lock:
+            w = self._window
+            w.tick()
+
+            def pcts(name: str) -> dict:
+                return {
+                    f"p{q}_ms": round(
+                        w.percentile(name, q, span_s) * 1e3, 3
+                    )
+                    for q in (50, 95, 99)
+                }
+
+            out = {
+                "enabled": True,
+                "window_s": w.window_s,
+                "covered_s": round(w.covered_s, 3),
+                "ttft_ms": pcts("repro_serve_ttft_seconds"),
+                "queue_wait_ms": pcts("repro_serve_queue_wait_seconds"),
+                "token_latency_ms": pcts(
+                    "repro_serve_step_latency_seconds"
+                ),
+                "tok_s": round(
+                    w.rate("repro_serve_generated_tokens_total", span_s),
+                    2,
+                ),
+                "admitted_per_s": round(
+                    w.rate("repro_serve_prefill_requests_total", span_s),
+                    3,
+                ),
+                "finished_per_s": round(
+                    w.rate(
+                        "repro_serve_requests_finished_total", span_s
+                    ),
+                    3,
+                ),
+                "rejected_per_s": round(
+                    w.rate("repro_serve_rejected_total", span_s), 3
+                ),
+                "queue_depth": len(self.scheduler.waiting),
+                "running_slots": len(self.scheduler.active()),
+                "memory": {
+                    "pool_pages": w.gauge("repro_mem_pool_pages"),
+                    "live_pages": w.gauge("repro_mem_pool_live_pages"),
+                    "cached_pages": w.gauge(
+                        "repro_mem_pool_cached_pages"
+                    ),
+                    "reserved_pages": w.gauge(
+                        "repro_mem_pool_reserved_pages"
+                    ),
+                    "fragmentation": w.gauge(
+                        "repro_mem_pool_fragmentation_ratio"
+                    ),
+                    "host_swap_bytes": w.gauge(
+                        "repro_mem_host_swap_bytes"
+                    ),
+                    "device_bytes_in_use": w.gauge(
+                        "repro_mem_device_bytes_in_use"
+                    ),
+                },
+            }
+            if self._slo_mon is not None:
+                out["slo"] = dict(self._slo_mon.last)
+            return out
+
+    def window_samples(
+        self, name: str, span_s: float | None = None
+    ) -> list[float]:
+        """Raw window samples for one histogram, read under the obs
+        lock (``ReplicaRouter`` merges these for fleet percentiles)."""
+        if self._window is None:
+            return []
+        with self._obs_lock:
+            self._window.tick()
+            return self._window.samples(name, span_s)
+
+    def slo_state(self) -> dict:
+        """Read-only burn-rate status (the ``/slo`` endpoint). The step
+        loop is the only *evaluator* — a scrape returns the retained
+        ``last`` result and can never consume a state transition."""
+        if self._slo_mon is None:
+            return {"enabled": False}
+        return {"enabled": True, **self._slo_mon.last}
+
+    def roofline(self) -> dict:
+        """Roofline terms for the compiled decode step (lazy, cached
+        per engine): FLOPs and HBM bytes parsed from the optimized HLO
+        (``repro.analysis.roofline``), per-device time lower bounds and
+        the dominant bottleneck. Costs one extra AOT compile of the
+        decode program on first call; degrades to ``available: False``
+        zeros when the backend can't produce analyzable HLO."""
+        if self._roofline is not None:
+            return self._roofline
+        try:
+            from repro.analysis.roofline import analyze_hlo, roofline_terms
+
+            zeros = jnp.zeros((self.ecfg.max_slots,), jnp.int32)
+            table0 = jnp.zeros_like(jnp.asarray(self.kv.page_table))
+            with self.mesh:
+                txt = (
+                    self._decode.lower(
+                        self.params, self.kv.buffers, zeros, zeros, table0
+                    )
+                    .compile()
+                    .as_text()
+                )
+            cost = analyze_hlo(txt)
+            terms = roofline_terms(cost)
+            self._roofline = {
+                "available": True,
+                "flops": cost.flops,
+                "bytes_accessed": cost.bytes_accessed,
+                "collective_bytes": cost.total_collective_bytes,
+                "arithmetic_intensity": round(
+                    cost.flops / cost.bytes_accessed, 4
+                )
+                if cost.bytes_accessed
+                else 0.0,
+                "bottleneck": terms["bottleneck"],
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+            }
+            # annotate the trace: a0 = intensity x1000, a1 = bottleneck
+            self.tracer.instant(
+                self._tk_decode,
+                self._nm_roofline,
+                int(self._roofline["arithmetic_intensity"] * 1000),
+                {"compute": 0, "memory": 1, "collective": 2}.get(
+                    terms["bottleneck"], 3
+                ),
+            )
+        except Exception:
+            self._roofline = {
+                "available": False,
+                "flops": 0.0,
+                "bytes_accessed": 0.0,
+                "collective_bytes": 0.0,
+                "arithmetic_intensity": 0.0,
+                "bottleneck": "unknown",
+                "compute_s": 0.0,
+                "memory_s": 0.0,
+                "collective_s": 0.0,
+            }
+        return self._roofline
 
     def _finish(
         self, state: SequenceState, *, reason: str | None = None
@@ -1365,6 +1783,7 @@ class Engine:
             out["prefix_cache"]["cached_pages"] = self.kv.cached_pages
             # keep the prom gauge in step with the pool
             self._prefix.stats.set_cached_pages(self.kv.cached_pages)
+        out["roofline"] = self.roofline()
         return out
 
     def export_perfetto(self, path: str) -> int:

@@ -28,13 +28,17 @@ __all__ = [
     "FinishedRequest",
     "REJECT_TOO_LARGE",
     "REJECT_TIMEOUT",
+    "REJECT_SHED",
 ]
 
 # ``FinishedRequest.reject_reason`` values (``finish_reason ==
-# "rejected"``): the request could *never* fit the engine's geometry vs
-# it waited longer than its ``ScheduleParams.max_queue_wait_s`` allowed.
+# "rejected"``): the request could *never* fit the engine's geometry,
+# it waited longer than its ``ScheduleParams.max_queue_wait_s`` allowed,
+# or the SLO burn-rate monitor shed it from the queue under overload
+# (``EngineConfig(slo=SloConfig(shed=True))``).
 REJECT_TOO_LARGE = "too_large"
 REJECT_TIMEOUT = "timeout"
+REJECT_SHED = "shed"
 
 
 @dataclasses.dataclass(frozen=True)

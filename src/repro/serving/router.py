@@ -170,8 +170,73 @@ class ReplicaRouter:
                 for eng in self.engines
                 if eng._prefix is not None
             )
+        # every replica compiles the same decode program; engine 0's
+        # roofline stands for the fleet (per_replica carries the rest)
+        out["roofline"] = self.engines[0].roofline()
         out["per_replica"] = [eng.stats_summary() for eng in self.engines]
         return out
+
+    def windowed_vars(self, span_s: float | None = None) -> dict:
+        """Fleet ``/vars``: true merged percentiles over every
+        replica's retained window samples (concatenation, same policy
+        as ``merged_metrics`` — never an average of averages), summed
+        rates and depths, plus each replica's own view."""
+        per = [eng.windowed_vars(span_s) for eng in self.engines]
+        live = [p for p in per if p.get("enabled")]
+        if not live:
+            return {"enabled": False, "per_replica": per}
+
+        def pcts(name: str) -> dict:
+            s: list[float] = []
+            for eng in self.engines:
+                s.extend(eng.window_samples(name, span_s))
+            if not s:
+                return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+            arr = np.asarray(s, np.float64)
+            return {
+                f"p{q}_ms": round(
+                    float(np.percentile(arr, q)) * 1e3, 3
+                )
+                for q in (50, 95, 99)
+            }
+
+        return {
+            "enabled": True,
+            "replicas": self.replicas,
+            "window_s": max(p["window_s"] for p in live),
+            "covered_s": max(p["covered_s"] for p in live),
+            "ttft_ms": pcts("repro_serve_ttft_seconds"),
+            "queue_wait_ms": pcts("repro_serve_queue_wait_seconds"),
+            "token_latency_ms": pcts("repro_serve_step_latency_seconds"),
+            "tok_s": round(sum(p["tok_s"] for p in live), 2),
+            "admitted_per_s": round(
+                sum(p["admitted_per_s"] for p in live), 3
+            ),
+            "finished_per_s": round(
+                sum(p["finished_per_s"] for p in live), 3
+            ),
+            "rejected_per_s": round(
+                sum(p["rejected_per_s"] for p in live), 3
+            ),
+            "queue_depth": sum(p["queue_depth"] for p in live),
+            "running_slots": sum(p["running_slots"] for p in live),
+            "per_replica": per,
+        }
+
+    def slo_state(self) -> dict:
+        """Fleet ``/slo``: the worst replica's state fronts the
+        response (an alert on any replica is an alert on the service)."""
+        per = [eng.slo_state() for eng in self.engines]
+        live = [p for p in per if p.get("enabled")]
+        if not live:
+            return {"enabled": False, "per_replica": per}
+        worst = max(live, key=lambda p: p.get("state_code", 0))
+        return {
+            "enabled": True,
+            "state": worst.get("state", "OK"),
+            "state_code": worst.get("state_code", 0),
+            "per_replica": per,
+        }
 
     def reset_stats(self) -> None:
         for eng in self.engines:

@@ -159,6 +159,56 @@ class ServeStats:
             "repro_serve_host_syncs_total",
             "sanctioned explicit device->host syncs",
         )
+        # device-memory telemetry, sampled host-side at end of step
+        # (never inside a jit'd function): paged-pool occupancy and
+        # fragmentation, COW reserve, host-swap residency, and the
+        # backend allocator's view when the platform exposes one
+        self._mem_pool_pages = g(
+            "repro_mem_pool_pages", "paged-pool capacity in pages"
+        )
+        self._mem_live_pages = g(
+            "repro_mem_pool_live_pages", "pages mapped to live sequences"
+        )
+        self._mem_cached_pages = g(
+            "repro_mem_pool_cached_pages",
+            "pages held by the radix prefix cache (reclaimable)",
+        )
+        self._mem_reserved_pages = g(
+            "repro_mem_pool_reserved_pages",
+            "pages reserved for admitted sequences' lifetime budgets",
+        )
+        self._mem_cow_reserve_pages = g(
+            "repro_mem_cow_reserve_pages",
+            "pages reserved against pending copy-on-write splits",
+        )
+        self._mem_fragmentation = g(
+            "repro_mem_pool_fragmentation_ratio",
+            "1 - free/(free+reclaimable) headroom actually admittable",
+        )
+        self._mem_host_swap_bytes = g(
+            "repro_mem_host_swap_bytes",
+            "bytes of swapped-out sequences resident in host memory",
+        )
+        self._mem_device_bytes_in_use = g(
+            "repro_mem_device_bytes_in_use",
+            "backend allocator bytes in use (0 when unavailable)",
+        )
+        # live SLO burn-rate monitor state (0=OK 1=WARN 2=CRITICAL) and
+        # the burn rates it derived them from; flight-recorder bundles
+        self._slo_state = g(
+            "repro_slo_state", "burn-rate monitor state (0/1/2)"
+        )
+        self._slo_burn_fast = g(
+            "repro_slo_burn_rate_fast", "fast-window burn rate"
+        )
+        self._slo_burn_slow = g(
+            "repro_slo_burn_rate_slow", "slow-window burn rate"
+        )
+        self._flight_incidents = c(
+            "repro_flight_incidents_total",
+            "flight-recorder incident bundles written",
+            labelname="kind",
+        )
 
     # ---- attribute views (external readers + tests) -------------------
     @property
@@ -339,6 +389,51 @@ class ServeStats:
         """A sanctioned explicit device->host sync (batched
         ``jax.device_get``)."""
         self._host_syncs.inc(n)
+
+    def record_memory(
+        self,
+        *,
+        n_pages: int,
+        live_pages: int,
+        cached_pages: int,
+        reserved_pages: int,
+        cow_reserve_pages: int,
+        host_swap_bytes: int,
+        device_bytes_in_use: int = 0,
+    ) -> None:
+        """End-of-step device-memory snapshot (gauges, last value wins).
+
+        Fragmentation is the share of nominally-usable headroom that is
+        *not* immediately admittable: reclaimable prefix-cache pages and
+        COW reserve sit between "free" and "live", so a pool can look
+        half empty while admission stalls.
+        """
+        self._mem_pool_pages.set(n_pages)
+        self._mem_live_pages.set(live_pages)
+        self._mem_cached_pages.set(cached_pages)
+        self._mem_reserved_pages.set(reserved_pages)
+        self._mem_cow_reserve_pages.set(cow_reserve_pages)
+        headroom = n_pages - live_pages
+        frag = (
+            (cached_pages + cow_reserve_pages) / headroom
+            if headroom > 0
+            else 0.0
+        )
+        self._mem_fragmentation.set(round(min(1.0, frag), 4))
+        self._mem_host_swap_bytes.set(host_swap_bytes)
+        self._mem_device_bytes_in_use.set(device_bytes_in_use)
+
+    def record_slo_state(
+        self, state_code: int, fast_burn: float, slow_burn: float
+    ) -> None:
+        """Latest burn-rate monitor evaluation (0=OK 1=WARN 2=CRITICAL)."""
+        self._slo_state.set(state_code)
+        self._slo_burn_fast.set(round(fast_burn, 6))
+        self._slo_burn_slow.set(round(slow_burn, 6))
+
+    def record_flight_incident(self, kind: str) -> None:
+        """One flight-recorder bundle written (labeled by trigger kind)."""
+        self._flight_incidents.inc(1, label=kind)
 
     def record_decode_indexed(self, n_pages: int) -> None:
         """Decode-written full pages indexed into the radix tree when

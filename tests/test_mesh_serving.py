@@ -193,3 +193,54 @@ def test_replica_router_streams_match_single_engine(tp):
 def test_router_rejects_when_devices_insufficient():
     with pytest.raises(ValueError):
         ReplicaRouter(_cfg(), replicas=16, tp=8)
+
+
+@requires_mesh
+def test_router_zero_traffic_replica_observability():
+    """A replica that never saw a request must not poison fleet
+    aggregation: merged metrics stay parseable, fleet percentiles come
+    from the replicas that do have samples, and the fleet /slo state
+    is well-defined."""
+    from repro.obs import SloConfig
+    from repro.obs.prom import parse, render
+
+    cfg = _cfg()
+    router = ReplicaRouter(
+        cfg,
+        replicas=2,
+        engine_cfg=EngineConfig(
+            max_slots=4,
+            max_len=64,
+            monitor=60.0,
+            slo=SloConfig(
+                target=0.99, fast_window_s=10.0, slow_window_s=60.0
+            ),
+        ),
+        seed=0,
+    )
+    # one request -> least-loaded routing sends it to replica 0 only
+    router.submit(_prompts(1)[0], 8)
+    fins = router.drain(max_steps=80)
+    assert len(fins) == 1
+    assert router.engines[0].stats.finished == 1
+    assert router.engines[1].stats.finished == 0
+
+    flat = parse(render(router.merged_metrics()))
+    assert flat["repro_serve_requests_finished_total"] == 1
+
+    s = router.stats_summary()
+    assert s["requests_finished"] == 1
+    assert [r["requests_finished"] for r in s["per_replica"]] == [1, 0]
+    assert s["per_replica"][1]["p50_token_latency_ms"] == 0.0
+
+    v = router.windowed_vars()
+    assert v["enabled"] and v["replicas"] == 2
+    # fleet percentile == replica 0's (replica 1 contributes nothing,
+    # and an average-of-averages would halve it)
+    v0 = router.engines[0].windowed_vars()
+    assert v["token_latency_ms"] == v0["token_latency_ms"]
+    assert v["queue_depth"] == 0 and v["running_slots"] == 0
+
+    slo = router.slo_state()
+    assert slo["enabled"] and slo["state"] == "OK"
+    assert len(slo["per_replica"]) == 2

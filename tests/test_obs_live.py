@@ -1,0 +1,708 @@
+"""Live telemetry plane: rolling windows, SLO burn-rate monitor with
+load-shed, flight recorder, and the /metrics scrape endpoint.
+
+The load-bearing contracts:
+
+  * ``WindowedView`` answers "over the last N seconds" from registry
+    deltas without touching a single hot-path record call, ages history
+    out, and restarts cleanly when ``reset_stats()`` swaps the registry
+    (registry *identity* is the reset protocol).
+  * The burn-rate monitor is the multi-window AND: both the fast and
+    the slow window must burn for an alert, shed rejections never count
+    as SLO errors (the monitor's own response must not latch CRITICAL).
+  * Monitoring alone never changes a token stream; with ``shed=True``
+    overload surfaces as structured ``REJECT_SHED`` results, never
+    silent drops.
+  * One injected step-time spike produces exactly one incident bundle
+    whose trace (counter lanes included) passes ``validate_trace_file``.
+  * A concurrent ``/metrics`` scrape racing ``Engine.reset_stats()``
+    always sees a parseable exposition, never a torn one.
+"""
+
+import json
+import math
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+from repro.obs import (
+    BurnRateMonitor,
+    FlightRecorder,
+    MetricsRegistry,
+    SloConfig,
+    SpikeDetector,
+    WindowedView,
+    validate_trace_file,
+)
+from repro.obs.http import MetricsServer, attach, split_listen
+from repro.obs.perfetto import TraceValidationError, validate_trace
+from repro.obs.prom import parse, render
+from repro.obs.slo import CRITICAL, OK, WARN
+from repro.obs.windows import Ewma, merged_percentile
+from repro.serving import Engine, EngineConfig, ScheduleParams
+from repro.serving.request import REJECT_SHED
+
+
+def _smoke_cfg(**kw):
+    return registry.get_smoke("qwen3-1.7b").replace(
+        num_layers=2, vocab_size=128, **kw
+    )
+
+
+class _Clock:
+    """Deterministic monotonic clock for window tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ----------------------------------------------------------------------
+# Rolling windows (no engine)
+# ----------------------------------------------------------------------
+
+
+def test_ewma_warmup_and_value():
+    e = Ewma(alpha=0.5)
+    assert e.value == 0.0 and e.n == 0
+    e.update(10.0)
+    assert e.value == 10.0
+    e.update(0.0)
+    assert e.value == pytest.approx(5.0) and e.n == 2
+    with pytest.raises(ValueError):
+        Ewma(alpha=0.0)
+
+
+def test_windowed_view_deltas_rates_and_span():
+    clk = _Clock()
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "")
+    h = reg.histogram("h_seconds", "")
+    w = WindowedView(lambda: reg, window_s=10.0, n_buckets=10, now_fn=clk)
+    for i in range(10):
+        clk.t = float(i)
+        c.inc(2)
+        h.observe(0.01 * (i + 1))
+        w.tick()
+    assert w.delta("c_total") == 20
+    assert w.rate("c_total") == pytest.approx(20 / 9.0)
+    # span-limited query covers the buckets overlapping the last 3 s
+    # (resolution = one bucket width, per the docstring)
+    assert 6 <= w.delta("c_total", span_s=3.0) <= 8
+    assert w.percentile("h_seconds", 50) == pytest.approx(0.055)
+    assert len(w.samples("h_seconds", span_s=2.0)) <= 3
+    assert w.covered_s == pytest.approx(9.0)
+    # old buckets age out entirely
+    clk.t = 30.0
+    w.tick()
+    assert w.delta("c_total") == 0
+    assert w.samples("h_seconds") == []
+
+
+def test_windowed_view_labeled_counter_deltas():
+    clk = _Clock()
+    reg = MetricsRegistry()
+    c = reg.counter("r_total", "", labelname="reason")
+    w = WindowedView(lambda: reg, window_s=10.0, n_buckets=5, now_fn=clk)
+    w.tick()
+    c.inc(3, label="shed")
+    c.inc(1, label="timeout")
+    clk.t = 1.0
+    w.tick()
+    assert w.delta("r_total") == 4
+    assert w.delta("r_total", label="shed") == 3
+    assert w.delta("r_total", label="timeout") == 1
+
+
+def test_windowed_view_registry_swap_resets():
+    """reset_stats() swaps the registry object; the view must drop
+    retained history (pre-reset samples never leak post-reset)."""
+    clk = _Clock()
+    reg1 = MetricsRegistry()
+    reg1.counter("c_total", "").inc(100)
+    reg1.histogram("h_seconds", "").observe(9.9)
+    box = {"reg": reg1}
+    w = WindowedView(
+        lambda: box["reg"], window_s=10.0, n_buckets=5, now_fn=clk
+    )
+    w.tick()  # seeds cursors at 0 -> the pre-existing 100 lands here
+    assert w.delta("c_total") == 100
+    reg2 = MetricsRegistry()
+    reg2.counter("c_total", "").inc(7)
+    box["reg"] = reg2
+    clk.t = 1.0
+    w.tick()
+    assert w.delta("c_total") == 7
+    assert w.samples("h_seconds") == []
+
+
+def test_windowed_view_stalled_ticks_restart():
+    """A tick gap longer than the whole window restarts the ring
+    instead of spinning through hundreds of empty buckets."""
+    clk = _Clock()
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "")
+    w = WindowedView(lambda: reg, window_s=5.0, n_buckets=5, now_fn=clk)
+    c.inc(5)
+    w.tick()
+    clk.t = 1e6
+    c.inc(1)
+    w.tick()
+    assert w.delta("c_total") == 1
+    assert len(w._buckets) == 1
+
+
+def test_merged_percentile_is_true_fleet_percentile():
+    clk = _Clock()
+    views = []
+    for samples in ([0.001] * 9, [1.0]):
+        reg = MetricsRegistry()
+        h = reg.histogram("h_seconds", "")
+        for s in samples:
+            h.observe(s)
+        v = WindowedView(lambda r=reg: r, window_s=10.0, now_fn=clk)
+        v.tick()
+        views.append(v)
+    # average-of-averages would put p50 near 0.5; the truth is 0.001
+    assert merged_percentile(views, "h_seconds", 50) == pytest.approx(
+        0.001
+    )
+    assert merged_percentile(views, "nope_seconds", 50) == 0.0
+
+
+# ----------------------------------------------------------------------
+# Metrics edge cases (zero samples, mixed labels)
+# ----------------------------------------------------------------------
+
+
+def test_counter_value_sums_base_and_labeled_increments():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "", labelname="kind")
+    c.inc(5)  # base (unlabeled) increments
+    c.inc(3, label="x")
+    assert c.value == 8 and c.get("x") == 3
+
+
+def test_empty_histogram_zero_sample_contract():
+    reg = MetricsRegistry()
+    h = reg.histogram("h_seconds", "")
+    assert h.count == 0 and h.sum == 0.0
+    assert h.percentile(99) == 0.0
+    assert h.mean() == 0.0 and h.min() == 0.0 and h.max() == 0.0
+    # the exposition of a sample-free registry still parses
+    flat = parse(render(reg))
+    assert flat["h_seconds_count"] == 0
+
+
+def test_prom_render_non_finite_values_parse():
+    reg = MetricsRegistry()
+    reg.gauge("g_nan", "").set(float("nan"))
+    reg.gauge("g_inf", "").set(float("inf"))
+    flat = parse(render(reg))
+    assert math.isnan(flat["g_nan"]) and flat["g_inf"] == math.inf
+
+
+# ----------------------------------------------------------------------
+# Burn-rate monitor
+# ----------------------------------------------------------------------
+
+
+def _slo_fixture(clk, cfg):
+    reg = MetricsRegistry()
+    total = reg.counter("repro_serve_slo_requests_total", "")
+    met = reg.counter("repro_serve_slo_met_total", "")
+    fin = reg.counter("repro_serve_requests_finished_total", "")
+    rej = reg.counter(
+        "repro_serve_rejected_total", "", labelname="reason"
+    )
+    w = WindowedView(
+        lambda: reg, window_s=cfg.slow_window_s, n_buckets=10, now_fn=clk
+    )
+    return BurnRateMonitor(w, cfg), total, met, fin, rej, w
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError):
+        SloConfig(target=1.0)
+    with pytest.raises(ValueError):
+        SloConfig(fast_window_s=10.0, slow_window_s=5.0)
+    with pytest.raises(ValueError):
+        SloConfig(warn_burn=3.0, critical_burn=2.0)
+    with pytest.raises(ValueError):
+        SloConfig(shed_max_per_tick=0)
+
+
+def test_burn_monitor_window_too_short_raises():
+    clk = _Clock()
+    reg = MetricsRegistry()
+    w = WindowedView(lambda: reg, window_s=1.0, now_fn=clk)
+    with pytest.raises(ValueError):
+        BurnRateMonitor(w, SloConfig(slow_window_s=60.0))
+
+
+def test_burn_monitor_state_machine_and_transitions():
+    clk = _Clock()
+    cfg = SloConfig(
+        target=0.9, fast_window_s=2.0, slow_window_s=10.0,
+        warn_burn=2.0, critical_burn=6.0,
+    )
+    mon, total, met, fin, rej, w = _slo_fixture(clk, cfg)
+    # healthy traffic: 100% attainment
+    total.inc(10)
+    met.inc(10)
+    w.tick()
+    s = mon.evaluate()
+    assert s["state"] == OK and s["transitioned_to"] is None
+    # a wave of misses: 20/30 errors = burn 6.7 >= critical in both
+    # windows (the healthy batch is still retained in each)
+    clk.t = 1.0
+    total.inc(20)
+    w.tick()
+    s = mon.evaluate()
+    assert s["state"] == CRITICAL and s["transitioned_to"] == CRITICAL
+    assert s["fast_burn"] >= 6.0 and s["slow_burn"] >= 6.0
+    # a second CRITICAL evaluation is steady state, not a transition
+    s = mon.evaluate()
+    assert s["state"] == CRITICAL and s["transitioned_to"] is None
+    assert mon.transitions[CRITICAL] == 1
+    # errors age out of both windows -> recovery
+    clk.t = 100.0
+    total.inc(20)
+    met.inc(19)  # 5% misses on a 10% budget: burn 0.5
+    w.tick()
+    s = mon.evaluate()
+    assert s["state"] == OK
+    assert mon.last is s  # /slo reads the retained result
+
+
+def test_burn_monitor_multiwindow_and_rule():
+    """A fast-window blip must NOT alert while the slow window is
+    healthy — state follows min(fast, slow)."""
+    clk = _Clock()
+    cfg = SloConfig(
+        target=0.9, fast_window_s=1.0, slow_window_s=10.0,
+        warn_burn=2.0, critical_burn=6.0,
+    )
+    mon, total, met, fin, rej, w = _slo_fixture(clk, cfg)
+    # 9 s of perfect traffic fills the slow window
+    for i in range(9):
+        clk.t = float(i)
+        total.inc(10)
+        met.inc(10)
+        w.tick()
+    # one bad second: fast window burns hard (20/30 = burn 6.7; one
+    # healthy bucket rides along at this resolution), slow window stays
+    # under warn (20/110 = burn 1.8)
+    clk.t = 9.0
+    total.inc(20)
+    w.tick()
+    s = mon.evaluate()
+    assert s["windows"]["fast"]["burn"] >= 6.0
+    assert s["windows"]["slow"]["burn"] < 2.0
+    assert s["state"] == OK
+
+
+def test_burn_monitor_fallback_excludes_shed_rejections():
+    """No deadline'd traffic: burn falls back to the non-shed rejection
+    fraction.  Shed rejections are the monitor's own output and never
+    count as errors (no CRITICAL latch)."""
+    clk = _Clock()
+    cfg = SloConfig(
+        target=0.9, fast_window_s=2.0, slow_window_s=10.0,
+        warn_burn=2.0, critical_burn=6.0,
+    )
+    mon, total, met, fin, rej, w = _slo_fixture(clk, cfg)
+    fin.inc(10)
+    rej.inc(50, label="shed")
+    w.tick()
+    s = mon.evaluate()
+    assert s["state"] == OK and s["fast_burn"] == 0.0
+    # real (timeout) rejections do burn
+    rej.inc(10, label="timeout")
+    clk.t = 0.5
+    w.tick()
+    s = mon.evaluate()
+    assert s["fast_burn"] >= 2.0 and s["state"] in (WARN, CRITICAL)
+
+
+# ----------------------------------------------------------------------
+# Spike detection + flight recorder (no engine)
+# ----------------------------------------------------------------------
+
+
+def test_spike_detector_warmup_fire_cooldown_adapt():
+    d = SpikeDetector(factor=4.0, min_samples=8, cooldown=4)
+    for _ in range(8):
+        assert not d.observe(0.01)
+    assert d.observe(1.0)  # spike fires once
+    assert not d.observe(1.0)  # refractory; spike folds into EWMA
+    for _ in range(10):
+        d.observe(1.0)
+    # the regression became the new baseline: no more firing
+    assert not d.observe(1.0)
+    assert d.fired == 1
+    with pytest.raises(ValueError):
+        SpikeDetector(factor=1.0)
+
+
+def test_spike_detector_min_value_floor():
+    d = SpikeDetector(factor=2.0, min_samples=2, min_value=0.5)
+    d.observe(0.001)
+    d.observe(0.001)
+    assert not d.observe(0.01)  # 10x the baseline but under the floor
+    assert d.observe(0.6)
+
+
+def test_flight_recorder_bundle_debounce_and_cap(tmp_path):
+    clk = _Clock()
+    reg = MetricsRegistry()
+    reg.counter("c_total", "").inc(3)
+    fr = FlightRecorder(
+        tmp_path / "fl", min_interval_s=1.0, max_bundles=2, clock=clk
+    )
+    p1 = fr.capture("spike", metrics=reg, config={"k": 1},
+                    context={"v": 2.0})
+    assert p1 is not None
+    man = json.loads((tmp_path / "fl").joinpath(
+        p1.rsplit("/", 1)[-1], "manifest.json").read_text())
+    assert man["kind"] == "spike" and man["config"] == {"k": 1}
+    assert parse((tmp_path / "fl").joinpath(
+        p1.rsplit("/", 1)[-1], "metrics.prom").read_text())[
+        "c_total"] == 3
+    # same kind inside min_interval_s: debounced
+    clk.t = 0.5
+    assert fr.capture("spike", metrics=reg) is None
+    # a different kind is not debounced by the first
+    assert fr.capture("slo_critical", metrics=reg) is not None
+    # global cap
+    clk.t = 10.0
+    assert fr.capture("spike", metrics=reg) is None
+    assert len(fr.incidents) == 2
+
+
+# ----------------------------------------------------------------------
+# Perfetto counter-track validation
+# ----------------------------------------------------------------------
+
+
+def _counter_payload(events):
+    meta = [
+        {"ph": "M", "pid": 0, "tid": 0, "name": "thread_name",
+         "args": {"name": "slot0"}},
+        {"ph": "M", "pid": 0, "tid": 1, "name": "thread_name",
+         "args": {"name": "counters"}},
+    ]
+    span = [
+        {"ph": "X", "pid": 0, "tid": 0, "ts": 0.0, "dur": 1.0,
+         "name": "decode", "args": {}},
+    ]
+    return {"traceEvents": meta + span + events}
+
+
+def test_validator_accepts_counter_series():
+    rep = validate_trace(_counter_payload([
+        {"ph": "C", "pid": 0, "tid": 1, "ts": 1.0, "name": "queue",
+         "args": {"value": 3}},
+        {"ph": "C", "pid": 0, "tid": 1, "ts": 2.0, "name": "queue",
+         "args": {"value": 2}},
+        {"ph": "C", "pid": 0, "tid": 1, "ts": 2.0, "name": "live",
+         "args": {"value": 7.5}},
+    ]))
+    assert rep["counter_series"] == 2
+
+
+def test_validator_rejects_bad_counter_events():
+    with pytest.raises(TraceValidationError):
+        validate_trace(_counter_payload([
+            {"ph": "C", "pid": 0, "tid": 1, "ts": 1.0, "name": "q",
+             "args": {"value": True}},  # bool is not a sample
+        ]))
+    with pytest.raises(TraceValidationError):
+        validate_trace(_counter_payload([
+            {"ph": "C", "pid": 0, "tid": 1, "ts": 1.0, "name": "q",
+             "args": {}},
+        ]))
+    with pytest.raises(TraceValidationError):
+        validate_trace(_counter_payload([
+            {"ph": "C", "pid": 0, "tid": 1, "ts": 2.0, "name": "q",
+             "args": {"value": 1}},
+            {"ph": "C", "pid": 0, "tid": 1, "ts": 1.0, "name": "q",
+             "args": {"value": 1}},
+        ]))
+
+
+# ----------------------------------------------------------------------
+# HTTP endpoint (registry-only, then engine-wired below)
+# ----------------------------------------------------------------------
+
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read().decode()
+
+
+def test_split_listen():
+    assert split_listen("127.0.0.1:9090") == ("127.0.0.1", 9090)
+    assert split_listen("[::1]:0") == ("[::1]", 0)
+    with pytest.raises(ValueError):
+        split_listen("9090")
+
+
+def test_metrics_server_routes_and_errors():
+    reg = MetricsRegistry()
+    reg.counter("c_total", "help").inc(5)
+
+    def boom():
+        raise RuntimeError("nope")
+
+    srv = MetricsServer(
+        "127.0.0.1", 0,
+        registry_fn=lambda: reg,
+        vars_fn=lambda: {"enabled": True, "tok_s": 1.5},
+        slo_fn=boom,
+    )
+    with srv:
+        st, body = _get(srv.url + "/metrics")
+        assert st == 200 and parse(body)["c_total"] == 5
+        st, body = _get(srv.url + "/healthz")
+        assert st == 200 and body == "ok\n"
+        st, body = _get(srv.url + "/vars?span_s=5")
+        assert st == 200 and json.loads(body)["tok_s"] == 1.5
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/slo")
+        assert e.value.code == 500  # handler error -> 500, not a crash
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/nope")
+        assert e.value.code == 404
+
+
+# ----------------------------------------------------------------------
+# Engine wiring
+# ----------------------------------------------------------------------
+
+
+def _prompts(n, rng=None, plen=12):
+    rng = rng or np.random.default_rng(3)
+    return [rng.integers(1, 127, plen).astype(np.int32) for _ in range(n)]
+
+
+def test_monitoring_never_changes_streams_and_vars_agree():
+    """The whole point of the off-hot-path design: monitor + SLO
+    (shed disabled) emits bit-identical tokens to a bare engine, and a
+    /vars window covering the run reproduces stats_summary()'s
+    percentiles exactly."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    prompts = _prompts(3)
+    streams, monitored = {}, None
+    for on in (False, True):
+        ecfg = EngineConfig(max_slots=2, max_len=64)
+        if on:
+            ecfg = EngineConfig(
+                max_slots=2, max_len=64, monitor=300.0,
+                slo=SloConfig(target=0.99, fast_window_s=30.0,
+                              slow_window_s=300.0),
+            )
+        eng = Engine(cfg, mesh, engine_cfg=ecfg)
+        for p in prompts:
+            eng.submit(p, 8, schedule=ScheduleParams(deadline_s=120.0))
+        fins = eng.drain(max_steps=300)
+        streams[on] = [
+            f.tokens.tolist() for f in sorted(fins, key=lambda f: f.uid)
+        ]
+        if on:
+            monitored = eng
+    assert streams[True] == streams[False]
+
+    v = monitored.windowed_vars()
+    assert v["enabled"] and v["covered_s"] >= 0.0
+    s = monitored.stats_summary()
+    # window spans the whole run -> exact agreement on raw-sample pcts
+    assert v["token_latency_ms"]["p50_ms"] == pytest.approx(
+        s["p50_token_latency_ms"], abs=1e-6
+    )
+    assert v["ttft_ms"]["p95_ms"] == pytest.approx(
+        s["ttft_ms"]["p95_ms"], abs=1e-6
+    )
+    mem = v["memory"]
+    assert mem["pool_pages"] > 0
+    assert 0.0 <= mem["fragmentation"] <= 1.0
+    slo = monitored.slo_state()
+    assert slo["enabled"] and slo["state"] == OK  # generous deadlines
+    # off engine exposes the disabled contract, not an error
+    bare = Engine(
+        cfg, mesh, engine_cfg=EngineConfig(max_slots=2, max_len=64)
+    )
+    assert bare.windowed_vars() == {"enabled": False}
+    assert bare.slo_state() == {"enabled": False}
+    assert bare.window_samples("repro_serve_ttft_seconds") == []
+
+
+def test_slo_shed_rejects_lowest_priority_as_structured_results():
+    """Impossible deadlines drive the monitor CRITICAL; with shed
+    armed, queued lowest-priority requests come back as REJECT_SHED
+    results (never silent drops) and high-priority work still
+    finishes.  With shed off the same overload sheds nothing."""
+    cfg = _smoke_cfg()
+    mesh = make_local_mesh()
+    for shed in (False, True):
+        eng = Engine(
+            cfg,
+            mesh,
+            engine_cfg=EngineConfig(
+                max_slots=1,
+                max_len=64,
+                preemption=False,
+                monitor=True,
+                slo=SloConfig(
+                    target=0.9,
+                    fast_window_s=0.5,
+                    slow_window_s=1.0,
+                    warn_burn=2.0,
+                    critical_burn=6.0,
+                    shed=shed,
+                    shed_max_per_tick=4,
+                ),
+            ),
+        )
+        prompts = _prompts(8, np.random.default_rng(11))
+        # deadline'd stream that cannot possibly meet 1 ms end-to-end
+        for p in prompts[:4]:
+            eng.submit(
+                p, 6,
+                schedule=ScheduleParams(priority=1, deadline_s=1e-3),
+            )
+        # low-priority best-effort queue behind the single slot
+        for p in prompts[4:]:
+            eng.submit(p, 6, schedule=ScheduleParams(priority=0))
+        fins = eng.drain(max_steps=3000)
+        assert len(fins) == 8
+        sheds = [f for f in fins if f.reject_reason == REJECT_SHED]
+        if shed:
+            assert sheds, "CRITICAL burn with shed=True must shed"
+            assert all(f.finish_reason == "rejected" for f in sheds)
+            # the low-priority class sheds first: every priority-0
+            # request is gone, and any priority-1 shed (the queue ran
+            # out of lower classes under sustained CRITICAL) happens
+            # strictly after the last priority-0 one
+            shed0 = [f for f in sheds if f.schedule.priority == 0]
+            shed1 = [f for f in sheds if f.schedule.priority == 1]
+            assert {f.uid for f in shed0} == {
+                f.uid for f in fins if f.schedule.priority == 0
+            }
+            if shed1:
+                assert min(f.finish_step for f in shed1) >= max(
+                    f.finish_step for f in shed0
+                )
+            assert eng._slo_mon.transitions[CRITICAL] >= 1
+            assert (
+                eng.metrics["repro_serve_rejected_total"].get(
+                    REJECT_SHED
+                )
+                == len(sheds)
+            )
+        else:
+            assert not sheds
+            assert all(f.finish_reason != "rejected" for f in fins)
+
+
+def test_step_time_spike_produces_exactly_one_valid_bundle(tmp_path):
+    """Inject a decode step-time spike after warmup: exactly one
+    incident bundle, and its trace (with counter lanes) passes
+    validate_trace_file."""
+    cfg = _smoke_cfg()
+    eng = Engine(
+        cfg,
+        make_local_mesh(),
+        engine_cfg=EngineConfig(
+            max_slots=2, max_len=64, trace=True,
+            flight_dir=str(tmp_path / "incidents"), spike_factor=8.0,
+        ),
+    )
+    for p in _prompts(2):
+        eng.submit(p, 6)
+    eng.drain(max_steps=300)
+    before = len(eng._flight.incidents)
+    # warm the detector well past min_samples, then spike hard, twice
+    # (cooldown + debounce must still yield exactly one bundle)
+    for _ in range(32):
+        eng._observe_step(0.01, 1, 0)
+    eng._observe_step(5.0, 1, 0)
+    eng._observe_step(5.0, 1, 0)
+    bundles = eng._flight.incidents[before:]
+    assert len(bundles) == 1 and "step_time_spike" in bundles[0]
+    man = json.loads(
+        (tmp_path / "incidents").joinpath(
+            bundles[0].rsplit("/", 1)[-1], "manifest.json"
+        ).read_text()
+    )
+    assert man["context"]["decode_step_s"] == 5.0
+    assert man["config"]["max_slots"] == 2
+    assert set(man["files"]) == {
+        "manifest.json", "metrics.prom", "trace.json"
+    }
+    rep = validate_trace_file(
+        str((tmp_path / "incidents").joinpath(
+            bundles[0].rsplit("/", 1)[-1], "trace.json"
+        ))
+    )
+    # the three per-step counter lanes ride along in the bundle
+    assert rep["counter_series"] >= 3 and rep["spans"] > 0
+    assert (
+        eng.metrics["repro_flight_incidents_total"].get(
+            "step_time_spike"
+        )
+        == 1
+    )
+
+
+def test_concurrent_scrape_vs_reset_stats():
+    """A scrape racing reset_stats() and live stepping must always get
+    a parseable exposition and consistent JSON — the registry swap is
+    atomic, windows tick under the obs lock."""
+    cfg = _smoke_cfg()
+    eng = Engine(
+        cfg,
+        make_local_mesh(),
+        engine_cfg=EngineConfig(max_slots=2, max_len=64, monitor=True),
+    )
+    srv = attach(eng)
+    stop = threading.Event()
+    errors: list[str] = []
+    scrapes = {"n": 0}
+
+    def scraper():
+        while not stop.is_set():
+            try:
+                _, body = _get(srv.url + "/metrics")
+                parse(body)
+                _, body = _get(srv.url + "/vars")
+                assert json.loads(body)["enabled"] is True
+                scrapes["n"] += 1
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(repr(e))
+                return
+
+    t = threading.Thread(target=scraper, daemon=True)
+    t.start()
+    try:
+        rng = np.random.default_rng(5)
+        for round_ in range(4):
+            for p in _prompts(2, rng):
+                eng.submit(p, 4)
+            eng.drain(max_steps=300)
+            eng.reset_stats()
+    finally:
+        stop.set()
+        t.join(timeout=10.0)
+        srv.stop()
+    assert not errors, errors
+    assert scrapes["n"] > 0
+    # post-reset the window restarted: no stale samples survive
+    assert eng.window_samples("repro_serve_ttft_seconds") == []
